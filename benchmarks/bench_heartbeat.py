@@ -1,0 +1,49 @@
+"""Paper Fig 11: heartbeat function time & daily monitoring cost.
+
+§5.5: execution time of the scheduled heartbeat (scan sessions table + ping
+clients in parallel) across memory allocations and client counts, and the
+daily cost at 1-per-minute scheduling — the "fraction of VM price" claim.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import ms, save_artifact, table
+from repro.core.cost import VM_DAILY, f as fn_cost
+from tests.conftest import make_service
+
+
+def run() -> Dict:
+    rows = []
+    for n_clients in (4, 16, 64):
+        for memory_mb in (512, 1024, 2048):
+            cloud, svc = make_service(seed=8, function_memory_mb=memory_mb)
+            clients = [svc.connect_sync(f"c{i}") for i in range(n_clients)]
+            for i, c in enumerate(clients):
+                c.create(f"/eph{i}", b"x", ephemeral=True)
+            svc.start_heartbeat(period=60.0, max_runs=10)
+            cloud.run()
+            runtimes = svc.runtime.stats["heartbeat"].runtimes
+            mean_rt = sum(runtimes) / len(runtimes)
+            invocations_per_day = 24 * 60  # highest AWS schedule frequency
+            daily = invocations_per_day * fn_cost(mean_rt, memory_mb)
+            rows.append({
+                "clients": n_clients,
+                "memory_MB": memory_mb,
+                "mean_ms": ms(mean_rt),
+                "daily_usd": round(daily, 4),
+                "vs_t3small_%": round(100 * daily / VM_DAILY["t3.small"], 2),
+                "alloc_time_%_of_day": round(
+                    100 * invocations_per_day * mean_rt / 86400, 3),
+            })
+    print(table("Fig 11 — heartbeat runtime and daily monitoring cost", rows,
+                ["clients", "memory_MB", "mean_ms", "daily_usd",
+                 "vs_t3small_%", "alloc_time_%_of_day"]))
+    payload = {"rows": rows}
+    save_artifact("bench_heartbeat", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

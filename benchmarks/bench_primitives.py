@@ -1,0 +1,140 @@
+"""Paper Table 6a + Fig 6b: synchronization-primitive latency & throughput.
+
+Reproduces §5.1: latency percentiles for regular DynamoDB writes, timed-lock
+acquire/release (varying item size), atomic counter, and atomic list append;
+then locked-vs-unlocked update throughput at increasing client counts, with
+the lock-efficiency figure the paper reports (~84% at 10 clients).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import ms, pct_row, save_artifact, table
+
+from repro.core import SimCloud
+from repro.core.primitives import Primitives
+from repro.core.storage import KVStore
+from repro.core.simcloud import Sleep
+
+
+def _bench_latency(n: int = 1000) -> List[Dict]:
+    cloud = SimCloud(seed=1)
+    kv = KVStore(cloud, "bench")
+    prim = Primitives(kv)
+    rows = []
+
+    def run_many(label, gen_factory, sizes=None, extra=None):
+        samples = []
+
+        def driver():
+            for i in range(n):
+                t0 = cloud.now
+                yield from gen_factory(i)
+                samples.append(cloud.now - t0)
+            return None
+
+        cloud.run_task(driver(), name=label)
+        rows.append(pct_row(label, samples, extra))
+
+    for size_kb in (1.0, 64.0):
+        payload = {"data": "x" * int(size_kb * 1024)}
+
+        def regular(i, payload=payload):
+            yield from kv.put("t", f"item{i % 16}", payload)
+
+        run_many(f"regular write {int(size_kb)}kB", regular)
+
+    for size_kb in (1.0, 64.0):
+        # pre-populate items with bulk data (lock latency grows with item size)
+        def setup(size_kb=size_kb):
+            for i in range(16):
+                yield from prim.kv.put(
+                    "state", f"lk{i}", {"data": "x" * int(size_kb * 1024)})
+            return None
+
+        cloud.run_task(setup(), name="setup")
+        acq, rel = [], []
+
+        def paired():
+            for i in range(n):
+                t0 = cloud.now
+                lock, _ = yield from prim.lock_acquire(f"lk{i % 16}", cloud.now)
+                acq.append(cloud.now - t0)
+                assert lock is not None
+                t0 = cloud.now
+                ok = yield from prim.lock_release(f"lk{i % 16}", lock)
+                rel.append(cloud.now - t0)
+                assert ok
+            return None
+
+        cloud.run_task(paired(), name="lock-pairs")
+        rows.append(pct_row(f"timed lock acquire {int(size_kb)}kB", acq))
+        rows.append(pct_row(f"timed lock release {int(size_kb)}kB", rel))
+
+    def counter(i):
+        yield from prim.counter_add("ctr", 1)
+
+    run_many("atomic counter", counter)
+
+    def list_append(i):
+        yield from prim.list_append("lst", [f"w{i}"])
+
+    run_many("atomic list append 1", list_append)
+    return rows
+
+
+def _bench_throughput(duration: float = 5.0) -> List[Dict]:
+    """Fig 6b: locked vs plain read+write pairs, 1..10 concurrent clients."""
+    rows = []
+    for n_clients in (1, 2, 4, 8, 10):
+        results = {}
+        for mode in ("plain", "locked"):
+            cloud = SimCloud(seed=2)
+            kv = KVStore(cloud, "bench")
+            prim = Primitives(kv)
+            counts = {"n": 0}
+
+            def client(cid):
+                key = f"item{cid}"
+                yield from kv.put("t", key, {"v": 0})
+                while cloud.now < duration:
+                    if mode == "locked":
+                        lock, item = yield from prim.lock_acquire(key, cloud.now)
+                        if lock is None:
+                            continue
+                        yield from prim.fenced_update(
+                            key, lock, lambda it: it.__setitem__("v", it.get("v", 0) + 1))
+                    else:
+                        item = yield from kv.get("t", key)
+                        yield from kv.put("t", key, {"v": (item or {}).get("v", 0) + 1})
+                    counts["n"] += 1
+                return None
+
+            for c in range(n_clients):
+                cloud.spawn(client(c), name=f"client{c}")
+            cloud.run(until=duration + 1.0)
+            results[mode] = counts["n"] / duration
+        rows.append({
+            "clients": n_clients,
+            "plain_rps": round(results["plain"], 1),
+            "locked_rps": round(results["locked"], 1),
+            "efficiency_%": round(100 * results["locked"] / results["plain"], 1),
+        })
+    return rows
+
+
+def run() -> Dict:
+    lat = _bench_latency()
+    thr = _bench_throughput()
+    print(table("Table 6a — synchronization primitive latency (ms)", lat,
+                ["name", "min", "p50", "p95", "p99", "max"]))
+    print(table("Fig 6b — locked update throughput", thr,
+                ["clients", "plain_rps", "locked_rps", "efficiency_%"]))
+    payload = {"latency": lat, "throughput": thr}
+    save_artifact("bench_primitives", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,123 @@
+"""Paper Table 7a + Fig 7b: serverless queue invocation latency & throughput.
+
+§5.2: end-to-end latency of an empty function triggered via direct
+invocation / standard SQS / SQS FIFO / DynamoDB Streams (the paper's
+counter-intuitive result: FIFO is *fastest*), and the FIFO saturation
+behaviour that bounds per-session throughput; plus the 160x SQS-vs-streams
+cost ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import ms, pct_row, save_artifact, table
+
+from repro.core import FifoQueue, SimCloud
+from repro.core.functions import FunctionRuntime
+from repro.core.simcloud import Sleep
+
+
+def _bench_latency(n: int = 500) -> List[Dict]:
+    rows = []
+    for label, trigger in [("direct invoke", "direct_invoke"),
+                           ("SQS standard", "std_trigger"),
+                           ("SQS FIFO", "fifo_trigger"),
+                           ("DynamoDB Stream", "stream_trigger")]:
+        cloud = SimCloud(seed=3)
+        runtime = FunctionRuntime(cloud)
+        samples = []
+        done = []
+
+        def body(ctx, batch):
+            # empty function returning over a warm TCP channel (§5.2: 864 us)
+            yield Sleep(cloud.sample("tcp_rtt"))
+            done.append(cloud.now)
+            return None
+
+        fn = runtime.wrap("probe", body)
+        if label == "direct invoke":
+            def driver():
+                for i in range(n):
+                    t0 = cloud.now
+                    task = cloud.spawn(fn([None]), name="direct",
+                                       delay=cloud.sample("direct_invoke"))
+                    from repro.core.simcloud import Wait
+                    yield Wait((task,))
+                    samples.append(cloud.now - t0)
+                return None
+
+            cloud.run_task(driver(), name="driver")
+        else:
+            q = FifoQueue(cloud, label, handler=fn, batch_size=1,
+                          trigger_kind=trigger)
+
+            def driver():
+                for i in range(n):
+                    t0 = cloud.now
+                    start = len(done)
+                    yield from q.push({"i": i})
+                    while len(done) <= start:
+                        yield Sleep(0.0005)
+                    samples.append(cloud.now - t0)
+                return None
+
+            cloud.run_task(driver(), name="driver")
+        rows.append(pct_row(label, samples))
+    return rows
+
+
+def _bench_throughput(duration: float = 10.0) -> List[Dict]:
+    """Fig 7b: saturation throughput of a single FIFO queue vs batch size."""
+    rows = []
+    for batch_size, label in [(1, "FIFO batch=1"), (10, "FIFO batch=10 (SQS cap)"),
+                              (100, "hypothetical batch=100")]:
+        cloud = SimCloud(seed=4)
+        runtime = FunctionRuntime(cloud)
+        served = {"n": 0}
+
+        def body(ctx, batch):
+            yield Sleep(cloud.sample("fn_overhead"))
+            served["n"] += len(batch)
+            return None
+
+        q = FifoQueue(cloud, "tput", handler=runtime.wrap("probe", body),
+                      batch_size=batch_size)
+
+        def producer():
+            while cloud.now < duration:
+                yield from q.push({"t": cloud.now})
+            return None
+
+        for _ in range(4):
+            cloud.spawn(producer(), name="producer")
+        cloud.run(until=duration + 2.0)
+        rows.append({"config": label, "req_per_s": round(served["n"] / duration, 1)})
+    return rows
+
+
+def _cost_ratio() -> Dict:
+    """§5.2: SQS 64 kB billing units vs DynamoDB-stream 1 kB write units."""
+    sqs_per_million = 0.5
+    ddb_stream_per_million_64kb = 1.25 * 64  # 64 write units per 64 kB message
+    return {"sqs_usd_per_M_64kB": sqs_per_million,
+            "ddb_stream_usd_per_M_64kB": ddb_stream_per_million_64kb,
+            "ratio": ddb_stream_per_million_64kb / sqs_per_million}
+
+
+def run() -> Dict:
+    lat = _bench_latency()
+    thr = _bench_throughput()
+    cost = _cost_ratio()
+    print(table("Table 7a — function invocation latency (ms)", lat,
+                ["name", "min", "p50", "p95", "p99", "max"]))
+    print(table("Fig 7b — FIFO queue throughput", thr, ["config", "req_per_s"]))
+    print(f"\nSQS vs DynamoDB-streams cost ratio: {cost['ratio']:.0f}x "
+          f"(paper: 160x)")
+    payload = {"latency": lat, "throughput": thr, "cost": cost}
+    save_artifact("bench_queues", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Paper Fig 8: read latency vs node size across storage backends.
+
+get_data served directly from the regional store (the read path never touches
+a function — the paper's core cost win), compared across S3-semantics object
+storage, DynamoDB-semantics KV storage, and the ZooKeeper baseline, for node
+sizes 1 kB .. 1 MB; plus the read-cost crossover (S3 $0.4/M flat vs DynamoDB
+per-4kB units).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import ms, pct_row, save_artifact, table
+from repro.core import SimCloud, ZooKeeperModel
+from repro.core.cost import R_S3, r_dd
+from repro.core.storage import KVStore, ObjectStore
+
+SIZES_KB = [1, 4, 16, 64, 128, 256, 1024]
+
+
+def run(n: int = 100) -> Dict:
+    rows = []
+    for size_kb in SIZES_KB:
+        cloud = SimCloud(seed=5)
+        obj = ObjectStore(cloud, "data")
+        kv = KVStore(cloud, "data")
+        zk = ZooKeeperModel(cloud)
+        payload = {"data": "x" * int(size_kb * 1024)}
+
+        def setup():
+            yield from obj.put("/node", payload)
+            yield from kv.put("t", "/node", payload)
+            yield from zk.write("/node", b"x" * int(size_kb * 1024))
+            return None
+
+        cloud.run_task(setup(), name="setup")
+        samples = {"s3": [], "ddb": [], "zk": []}
+
+        def reader():
+            for i in range(n):
+                t0 = cloud.now
+                yield from obj.get("/node")
+                samples["s3"].append(cloud.now - t0)
+                t0 = cloud.now
+                yield from kv.get("t", "/node")
+                samples["ddb"].append(cloud.now - t0)
+                t0 = cloud.now
+                yield from zk.read("/node", size_kb=size_kb)
+                samples["zk"].append(cloud.now - t0)
+            return None
+
+        cloud.run_task(reader(), name="reader")
+        rows.append({
+            "size_kB": size_kb,
+            "s3_p50_ms": ms(sorted(samples["s3"])[n // 2]),
+            "ddb_p50_ms": ms(sorted(samples["ddb"])[n // 2]),
+            "zk_p50_ms": ms(sorted(samples["zk"])[n // 2]),
+            "s3_usd_per_M": round(R_S3 * 1e6, 2),
+            "ddb_usd_per_M": round(r_dd(size_kb) * 1e6, 2),
+        })
+    print(table("Fig 8 — read latency and cost vs node size", rows,
+                ["size_kB", "s3_p50_ms", "ddb_p50_ms", "zk_p50_ms",
+                 "s3_usd_per_M", "ddb_usd_per_M"]))
+    crossover = next((r for r in rows if r["ddb_usd_per_M"] > r["s3_usd_per_M"]), None)
+    ratio128 = next(r for r in rows if r["size_kB"] == 128)
+    print(f"\n128 kB read cost ratio DDB/S3: "
+          f"{ratio128['ddb_usd_per_M']/ratio128['s3_usd_per_M']:.0f}x (paper: 20x)")
+    payload = {"rows": rows}
+    save_artifact("bench_reads", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Fig 9 / Fig 10 / Table 3: write path latency, breakdown, tails.
+
+End-to-end set_data latency vs payload size against the ZooKeeper baseline,
+per-phase timing inside the writer (lock / push-to-distributor / commit) and
+distributor (get-node / update-user-store / watch-query), and the tail
+percentiles the paper uses to locate the bottleneck (queue push + S3 update).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import ms, pct_row, save_artifact, table
+from repro.core import SimCloud, ZooKeeperModel
+from tests.conftest import make_service  # reuse the wired service factory
+
+SIZES = [(0.004, "4B"), (1.0, "1kB"), (64.0, "64kB"), (250.0, "250kB")]
+
+
+def run(n: int = 60) -> Dict:
+    e2e_rows = []
+    phase_rows = []
+    for size_kb, label in SIZES:
+        cloud, svc = make_service(seed=6)
+        client = svc.connect_sync("bench")
+        payload = b"x" * int(size_kb * 1024)
+        client.create("/bench", b"init")
+
+        for i in range(n):
+            client.set_data("/bench", payload)
+        zk_cloud = SimCloud(seed=7)
+        zk = ZooKeeperModel(zk_cloud)
+        zk_samples = []
+
+        def zk_driver():
+            for i in range(n):
+                t0 = zk_cloud.now
+                yield from zk.write("/bench", payload)
+                zk_samples.append(zk_cloud.now - t0)
+            return None
+
+        zk_cloud.run_task(zk_driver(), name="zk")
+        e2e = client.client.write_latencies[1:]
+        e2e_rows.append(pct_row(f"FaaSKeeper set_data {label}", e2e))
+        e2e_rows.append(pct_row(f"ZooKeeper set_data {label}", zk_samples))
+
+        # phase breakdown from SimCloud metrics recorded by writer/distributor
+        for phase in ("writer_total", "writer_lock", "writer_push",
+                      "writer_commit", "dist_total", "dist_get_node",
+                      "dist_update_node", "dist_watch_query"):
+            samples = cloud.metrics.get(phase, [])
+            if samples:
+                phase_rows.append(pct_row(f"{phase} {label}", samples))
+    print(table("Fig 9 — end-to-end write latency (ms)", e2e_rows,
+                ["name", "min", "p50", "p95", "p99", "max"]))
+    print(table("Table 3 / Fig 10 — function phase breakdown (ms)", phase_rows,
+                ["name", "min", "p50", "p90", "p95", "p99"]))
+    payload = {"e2e": e2e_rows, "phases": phase_rows}
+    save_artifact("bench_writes", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

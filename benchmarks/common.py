@@ -1,0 +1,45 @@
+"""Shared benchmark helpers: result tables + artifact output."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+from typing import Any, Dict, List
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+OUT_DIR = Path(__file__).resolve().parent / "out"
+
+
+def ms(x: float) -> float:
+    return round(x * 1000.0, 2)
+
+
+def table(title: str, rows: List[Dict[str, Any]], columns: List[str]) -> str:
+    lines = [f"\n## {title}", "| " + " | ".join(columns) + " |",
+             "|" + "|".join("---" for _ in columns) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in columns) + " |")
+    return "\n".join(lines)
+
+
+def save_artifact(name: str, payload: Any) -> Path:
+    OUT_DIR.mkdir(exist_ok=True)
+    p = OUT_DIR / f"{name}.json"
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return p
+
+
+def pct_row(name: str, samples, extra: Dict[str, Any] = None) -> Dict[str, Any]:
+    from repro.core import percentiles
+
+    p = percentiles(samples)
+    row = {"name": name, **{k: ms(v) for k, v in p.items()}}
+    if extra:
+        row.update(extra)
+    return row

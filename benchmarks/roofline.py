@@ -1,0 +1,182 @@
+"""Roofline analysis per (arch x shape) cell — EXPERIMENTS.md §Roofline.
+
+Methodology (see also EXPERIMENTS.md §Dry-run):
+
+* XLA's HloCostAnalysis counts while-loop bodies ONCE, so flops/bytes from a
+  scan-over-layers (or grad-accum) compile are structurally undercounted.
+  We therefore compile two ANALYSIS VARIANTS per cell — depths d1 < d2 with
+  ``scan_layers=False`` (unrolled), ``accum_steps=1`` and streaming-attention
+  disabled (its kv-block lax.scan would hide attention flops the same way) —
+  and extrapolate every quantity linearly in depth:
+
+      q(L) = a + b*L,   b = (q(d2) - q(d1)) / (d2 - d1)
+
+  Exact for flops/bytes/collective-bytes because each is affine in layer
+  count.  The full-depth production compile (scan + remat + accum) is still
+  what the dry-run validates for memory/shardability; this module only
+  replaces its *counters*.
+
+* Terms (per training/serve step, seconds):
+      compute    = flops_per_dev        / peak_bf16
+      memory     = hbm_bytes_per_dev    / hbm_bw
+      collective = wire_bytes_per_dev   / ici_bw
+  with the wire model documented in launch/hlo_analysis.py.
+
+* MODEL_FLOPS: train = 6*N*tokens (8*N*tokens under full remat — we report
+  the 6N D convention and list remat separately), prefill = 2*N*tokens,
+  decode = 2*N_active*batch.  The ratio MODEL_FLOPS / HLO_FLOPS_total flags
+  remat/redundancy waste.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+from .common import save_artifact, table
+
+from repro import configs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import SHAPES_BY_NAME, EncDecConfig
+
+
+def _analysis_depths(cfg) -> Tuple[int, int]:
+    if cfg.family == "hybrid":
+        u = len(cfg.hybrid.pattern)
+        return u, 2 * u
+    return 2, 4
+
+
+def _depth_overrides(cfg, depth: int) -> Dict:
+    ov: Dict = {"n_layers": depth, "scan_layers": False}
+    if cfg.family == "audio":
+        ov["encdec"] = dataclasses.replace(cfg.encdec, n_encoder_layers=depth)
+    return ov
+
+
+def _counters(rec: Dict) -> Dict[str, float]:
+    coll = rec.get("collectives", {})
+    return {
+        "flops": rec.get("flops_per_device", 0.0),
+        "bytes": rec.get("hbm_bytes_per_device", 0.0),
+        "wire": float(coll.get("wire_bytes_per_device", 0) or 0),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 new token/sequence
+
+
+def analyze_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 step_overrides: Optional[Dict] = None,
+                 extra_cfg_overrides: Optional[Dict] = None,
+                 policy_kw: Optional[Dict] = None) -> Dict:
+    """Two shallow unrolled compiles -> extrapolated roofline terms."""
+    from repro.launch.dryrun import run_cell
+    from repro.models import layers as L
+    from repro.train.step import TrainStepConfig
+
+    cfg = configs.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    d1, d2 = _analysis_depths(cfg)
+    old_threshold = L.STREAM_KV_THRESHOLD
+    L.STREAM_KV_THRESHOLD = 1 << 60  # disable streaming in analysis variants
+    try:
+        recs = []
+        for depth in (d1, d2):
+            ov = _depth_overrides(cfg, depth)
+            if extra_cfg_overrides:
+                ov.update(extra_cfg_overrides)
+            kw: Dict = {"cfg_overrides": ov, "policy_kw": policy_kw}
+            if shape.kind == "train":
+                kw["step_cfg"] = TrainStepConfig(**(step_overrides or {}))
+            rec = run_cell(arch, shape_name, multi_pod=multi_pod, **kw)
+            if rec.get("status") != "OK":
+                return {"arch": arch, "shape": shape_name, "status": "ANALYSIS_FAIL",
+                        "error": rec.get("error")}
+            recs.append(_counters(rec))
+    finally:
+        L.STREAM_KV_THRESHOLD = old_threshold
+
+    full = cfg.n_layers
+    out = {}
+    for key in ("flops", "bytes", "wire"):
+        b = (recs[1][key] - recs[0][key]) / (d2 - d1)
+        a = recs[0][key] - b * d1
+        out[key] = a + b * full
+
+    n_chips = 512 if multi_pod else 256
+    terms = hlo_analysis.roofline(
+        flops_total=out["flops"] * n_chips,
+        hbm_bytes_total=out["bytes"] * n_chips,
+        wire_bytes_per_device=out["wire"],
+        n_chips=n_chips,
+    )
+    mf = model_flops(cfg, shape)
+    hlo_total = out["flops"] * n_chips
+    return {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "status": "OK",
+        "flops_per_dev": out["flops"], "hbm_bytes_per_dev": out["bytes"],
+        "wire_bytes_per_dev": out["wire"],
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "bound_s": terms.bound_s,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "mfu_bound": terms.mfu_bound(mf),
+    }
+
+
+def fmt_row(r: Dict) -> Dict:
+    if r.get("status") != "OK":
+        return {"arch": r.get("arch"), "shape": r.get("shape"),
+                "dominant": "FAIL", "note": r.get("error", "")[:60]}
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "compute_ms": round(r["compute_s"] * 1e3, 2),
+        "memory_ms": round(r["memory_s"] * 1e3, 2),
+        "collective_ms": round(r["collective_s"] * 1e3, 2),
+        "dominant": r["dominant"],
+        "useful_ratio": round(r["useful_ratio"], 3),
+        "mfu_bound_%": round(100 * r["mfu_bound"], 1),
+    }
+
+
+def run(cells: Optional[List[Tuple[str, str]]] = None, quick: bool = True) -> Dict:
+    """Default ('quick') mode analyses one representative cell per family so
+    ``python -m benchmarks.run`` stays fast; the full 33-cell table is built
+    by scripts/run_roofline_matrix.py (results in EXPERIMENTS.md)."""
+    if cells is None:
+        cells = [("qwen3-14b", "train_4k"), ("mamba2-1.3b", "train_4k"),
+                 ("moonshot-v1-16b-a3b", "train_4k"),
+                 ("whisper-base", "train_4k")] if quick else [
+            (a, s) for a in configs.list_archs()
+            for s in configs.get(a).shapes]
+    rows = []
+    for arch, shape in cells:
+        rows.append(analyze_cell(arch, shape))
+        print(json.dumps(fmt_row(rows[-1])), flush=True)
+    print(table("Roofline terms (single-pod 16x16, per step)",
+                [fmt_row(r) for r in rows],
+                ["arch", "shape", "compute_ms", "memory_ms", "collective_ms",
+                 "dominant", "useful_ratio", "mfu_bound_%"]))
+    save_artifact("roofline", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--full" not in sys.argv)

@@ -1,0 +1,44 @@
+"""Benchmark aggregator: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+
+Artifacts land in benchmarks/out/*.json; EXPERIMENTS.md cites them.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    sections = []
+
+    from . import (bench_cost, bench_heartbeat, bench_primitives, bench_queues,
+                   bench_reads, bench_writes)
+
+    for name, mod in [("primitives (Table 6a / Fig 6b)", bench_primitives),
+                      ("queues (Table 7a / Fig 7b)", bench_queues),
+                      ("reads (Fig 8)", bench_reads),
+                      ("writes (Fig 9/10, Table 3)", bench_writes),
+                      ("heartbeat (Fig 11)", bench_heartbeat),
+                      ("cost model (Table 4 / Fig 12 / §6)", bench_cost)]:
+        print(f"\n{'='*72}\n=== {name}\n{'='*72}")
+        mod.run()
+        sections.append(name)
+
+    if "--skip-roofline" not in sys.argv:
+        print(f"\n{'='*72}\n=== roofline (dry-run derived; full table in "
+              f"EXPERIMENTS.md)\n{'='*72}")
+        from . import roofline
+
+        roofline.run(quick=True)
+        sections.append("roofline")
+
+    print(f"\nall {len(sections)} benchmark sections completed "
+          f"in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+FaaSKeeper control plane doing what ZooKeeper does for production fleets —
+membership, transactional checkpoints, crash recovery, straggler scanning.
+
+Acts out a node failure mid-run and recovers from the last *committed*
+manifest (never a torn checkpoint — paper Appendix B atomicity, applied to
+training state).
+
+    PYTHONPATH=src python examples/train_with_coordination.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro import configs
+from repro.checkpoint import CheckpointStore
+from repro.coord import CoordinatedManifest, MembershipService, StragglerDetector
+from repro.core import FaaSKeeperService, SimCloud
+from repro.data import DataConfig, SyntheticPipeline
+from repro.models import build_model
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import TrainStepConfig, init_train_state
+
+# ~100M params: a scaled-down qwen3-family config (same code path as the
+# assigned full-scale config — only dims differ).
+CFG_100M = dataclasses.replace(
+    configs.get("qwen3-14b"),
+    name="qwen3-100m", n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=2560, vocab=16384, head_dim=64, remat="none",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300,
+                    help="~3 s/step on CPU; use --steps 30 for a smoke run")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+    if args.fail_at is None:
+        args.fail_at = max(2, args.steps * 3 // 5)
+
+    cloud = SimCloud(seed=0)
+    svc = FaaSKeeperService(cloud)
+    membership = MembershipService(svc)
+    stragglers = StragglerDetector(svc)
+    manifest = CoordinatedManifest(svc, job="example")
+    worker = membership.join("worker-0", {"devices": jax.device_count()})
+    print(f"[coord] members: {membership.members()}")
+
+    model = build_model(CFG_100M)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(model.init(jax.random.key(0))))
+    print(f"model: {CFG_100M.name}, {n_params/1e6:.1f}M params")
+
+    shape = ShapeSpec("ex", seq_len=64, global_batch=2, kind="train")
+    pipe = SyntheticPipeline(CFG_100M, shape, DataConfig(seed=0))
+    optim = AdamWConfig(lr=1e-3, total_steps=args.steps,
+                        warmup_steps=max(2, args.steps // 10), schedule="cosine")
+    step_cfg = TrainStepConfig(accum_steps=2)
+    params = model.init(jax.random.key(0))
+    state = init_train_state(model, params, step_cfg)
+    train_step = jax.jit(make_train_step(model, optim, step_cfg))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        store = CheckpointStore(ckpt_dir, committer=manifest.commit,
+                                latest_resolver=manifest.latest)
+        losses = []
+        step = 0
+        crashed = False
+        while step < args.steps:
+            if step == args.fail_at and not crashed:
+                crashed = True
+                print(f"\n[fault] worker crashes at step {step}!")
+                membership.fail(worker)
+                svc.start_heartbeat(period=5.0, max_runs=3)
+                cloud.run()
+                print(f"[coord] heartbeat evicted it; members: {membership.members()}")
+                # --- recovery: rejoin, restore from last committed manifest ---
+                worker2 = membership.join("worker-0b")
+                restored, at = store.restore({"params": params, "opt": state})
+                params, state = restored["params"], restored["opt"]
+                step = at
+                print(f"[coord] recovered at committed step {at} "
+                      f"(manifest txid-ordered via FaaSKeeper)\n")
+                continue
+            batch = pipe.host_batch(step)
+            params, state, metrics = train_step(params, state, batch)
+            losses.append(float(metrics["loss"]))
+            stragglers.report("worker-0", step)
+            step += 1
+            if step % max(5, args.steps // 10) == 0:
+                print(f"step {step:4d}  loss {losses[-1]:.4f}")
+            if step % max(10, args.steps // 6) == 0:
+                store.save(step, {"params": params, "opt": state})
+                print(f"[coord] checkpoint committed at step {step} "
+                      f"(latest -> {manifest.latest()})")
+        print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(markov-chain floor {pipe.optimal_loss():.3f})")
+        assert losses[-1] < losses[0], "training must improve"
+        print(f"[coord] total control-plane bill: "
+              f"${svc.cost_summary()['total_usd']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .store import CheckpointStore, restore_pytree, save_pytree
+
+__all__ = ["CheckpointStore", "restore_pytree", "save_pytree"]

@@ -1,0 +1,171 @@
+"""Sharded checkpoint store with FaaSKeeper-coordinated commits.
+
+Layout (mirrors the paper's split between bulk user data and control data):
+
+    <root>/step_<n>/<leaf-path>.npy     bulk tensors   ("S3 object store")
+    manifest: committed through coord.ckpt_coord as a FaaSKeeper transaction
+              ("DynamoDB system store") — the manifest *is* the commit point.
+
+A checkpoint is visible iff its manifest transaction committed; a crash
+mid-save leaves dangling .npy files that the next save's garbage pass prunes
+(paper §4.5 heartbeat/cleanup analogue).  ``save_async`` overlaps serialization
+with the next training step (background thread; device->host copy happens
+synchronously first, as on real fleets).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def save_pytree(tree: Any, directory: str) -> Dict[str, Any]:
+    os.makedirs(directory, exist_ok=True)
+    manifest = {"leaves": []}
+    for path, leaf in _leaf_paths(tree):
+        arr = np.asarray(leaf)
+        fn = path.replace("/", "__") + ".npy"
+        np.save(os.path.join(directory, fn), arr)
+        manifest["leaves"].append(
+            {"path": path, "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    return manifest
+
+
+def restore_pytree(template: Any, directory: str) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    named = _leaf_paths(template)
+    leaves = []
+    for (path, leaf) in named:
+        fn = os.path.join(directory, path.replace("/", "__") + ".npy")
+        arr = np.load(fn)
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return treedef.unflatten(leaves)
+
+
+class CheckpointStore:
+    """Filesystem bulk store + pluggable manifest committer.
+
+    ``committer(step, manifest) -> None`` is called after the bulk write; the
+    default records to a local JSON log, the coord/ layer swaps in the
+    FaaSKeeper transactional commit.
+    """
+
+    def __init__(self, root: str, committer: Optional[Callable] = None,
+                 latest_resolver: Optional[Callable] = None, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._committer = committer or self._local_commit
+        self._latest_resolver = latest_resolver or self._local_latest
+        self._threads: List[threading.Thread] = []
+        # async saves serialize on this lock: the committer talks to the
+        # (single-threaded) control plane, and manifests must commit in order
+        self._save_lock = threading.Lock()
+        os.makedirs(root, exist_ok=True)
+
+    # -- local (non-coordinated) manifest fallback ------------------------------
+
+    def _log_path(self) -> str:
+        return os.path.join(self.root, "manifest_log.json")
+
+    def _local_commit(self, step: int, manifest: Dict) -> None:
+        log = []
+        if os.path.exists(self._log_path()):
+            with open(self._log_path()) as f:
+                log = json.load(f)
+        log.append({"step": step, "manifest": manifest})
+        tmp = self._log_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(log, f)
+        os.replace(tmp, self._log_path())
+
+    def _local_latest(self) -> Optional[int]:
+        if not os.path.exists(self._log_path()):
+            return None
+        with open(self._log_path()) as f:
+            log = json.load(f)
+        return log[-1]["step"] if log else None
+
+    # -- public API ---------------------------------------------------------------
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def save(self, step: int, tree: Any) -> None:
+        host_tree = jax.device_get(tree)
+        self._save_host(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> threading.Thread:
+        host_tree = jax.device_get(tree)  # sync device->host; disk I/O async
+        t = threading.Thread(target=self._save_host, args=(step, host_tree), daemon=True)
+        t.start()
+        self._threads.append(t)
+        return t
+
+    def _save_host(self, step: int, host_tree: Any) -> None:
+        with self._save_lock:
+            self._gc_dangling()
+            manifest = save_pytree(host_tree, self.step_dir(step))
+            manifest["step"] = step
+            self._committer(step, manifest)
+            self._gc_old()
+
+    def wait(self) -> None:
+        for t in self._threads:
+            t.join()
+        self._threads.clear()
+
+    def latest_step(self) -> Optional[int]:
+        return self._latest_resolver()
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no committed checkpoint")
+        return restore_pytree(template, self.step_dir(step)), step
+
+    # -- garbage collection ----------------------------------------------------------
+
+    def _committed_steps(self) -> List[int]:
+        latest = self._latest_resolver()
+        if latest is None:
+            return []
+        steps = []
+        if os.path.exists(self._log_path()):
+            with open(self._log_path()) as f:
+                steps = [e["step"] for e in json.load(f)]
+        return steps or [latest]
+
+    def _gc_dangling(self) -> None:
+        committed = set(self._committed_steps())
+        for d in os.listdir(self.root):
+            if d.startswith("step_"):
+                s = int(d.split("_")[1])
+                if s not in committed and committed and s < max(committed):
+                    shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+
+    def _gc_old(self) -> None:
+        committed = sorted(self._committed_steps())
+        for s in committed[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)

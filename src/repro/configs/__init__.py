@@ -1,0 +1,56 @@
+"""Assigned architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines ``CONFIG`` (the exact assigned full-scale config) and the
+registry exposes ``get(name)`` / ``list_archs()`` plus ``input_specs`` for the
+dry-run (ShapeDtypeStruct stand-ins — no allocation ever happens for the full
+configs; they are exercised only via ``launch/dryrun.py``).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ArchConfig
+
+_ARCHS = [
+    "internvl2_2b",
+    "mamba2_1p3b",
+    "starcoder2_3b",
+    "qwen3_14b",
+    "qwen1p5_110b",
+    "minicpm_2b",
+    "moonshot_v1_16b_a3b",
+    "qwen3_moe_235b_a22b",
+    "whisper_base",
+    "recurrentgemma_2b",
+]
+
+_ALIAS = {
+    "internvl2-2b": "internvl2_2b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen3-14b": "qwen3_14b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "minicpm-2b": "minicpm_2b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "whisper-base": "whisper_base",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+
+def get(name: str) -> ArchConfig:
+    mod_name = _ALIAS.get(name, name.replace("-", "_").replace(".", "p"))
+    if mod_name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {list(_ALIAS)}")
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_ALIAS.keys())
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get(n) for n in list_archs()}

@@ -1,0 +1,19 @@
+"""Control-plane <-> data-plane coupling.
+
+The data plane consumes FaaSKeeper exactly the way production fleets consume
+ZooKeeper/etcd: ephemeral-znode membership, transactional checkpoint
+manifests, watch-driven reconfiguration, heartbeat-based failure detection.
+"""
+
+from .membership import MembershipService, WorkerHandle
+from .ckpt_coord import CoordinatedManifest
+from .stragglers import StragglerDetector
+from .serving_front import ServingFrontend
+
+__all__ = [
+    "CoordinatedManifest",
+    "MembershipService",
+    "ServingFrontend",
+    "StragglerDetector",
+    "WorkerHandle",
+]

@@ -1,0 +1,46 @@
+"""FaaSKeeper core — the paper's contribution, faithfully reproduced.
+
+Public surface:
+  * :class:`SimCloud` — deterministic simulated cloud substrate,
+  * :class:`FaaSKeeperService` — the wired service (Fig. 4/5),
+  * :class:`FaaSKeeperClient` / :class:`SyncClient` — kazoo-like API,
+  * :mod:`cost` — §6 cost model,
+  * :class:`ZooKeeperModel` — the paper's baseline.
+"""
+
+from .client import FaaSKeeperClient, Stat, SyncClient
+from .primitives import Lock, Primitives
+from .queues import FifoQueue
+from .service import FaaSKeeperService
+from .simcloud import FaultPlan, SimCloud, SimulatedCrash, percentiles
+from .storage import KVStore, ObjectStore
+from .znode import (
+    BadVersionError,
+    FKError,
+    NodeExistsError,
+    NoNodeError,
+    NotEmptyError,
+)
+from .zookeeper_baseline import ZooKeeperModel
+
+__all__ = [
+    "FaaSKeeperClient",
+    "FaaSKeeperService",
+    "FaultPlan",
+    "FifoQueue",
+    "KVStore",
+    "Lock",
+    "ObjectStore",
+    "Primitives",
+    "SimCloud",
+    "SimulatedCrash",
+    "Stat",
+    "SyncClient",
+    "ZooKeeperModel",
+    "percentiles",
+    "FKError",
+    "NoNodeError",
+    "NodeExistsError",
+    "BadVersionError",
+    "NotEmptyError",
+]

@@ -1,0 +1,141 @@
+"""FaaSKeeper cost model — paper §6, Table 4, Fig. 12.
+
+Analytic model (USD):
+  R_S3(s)  = 4e-7                        per read (billed per access)
+  W_S3(s)  = 5e-6                        per write
+  R_DD(s)  = ceil(s/4) * 0.25e-6         per read  (4 kB units)
+  W_DD(s)  = ceil(s)   * 1.25e-6         per write (1 kB units)
+  Q(s)     = ceil(s/64) * 0.5e-6         per queue push (64 kB increments)
+  F(t,mem) = t * mem/1024 * 1.66667e-5 + 2e-7   Lambda GB-s + invoke
+
+  COST_R = R_S3(s)
+  COST_W = 2 Q(s) + 3 W_DD(1) + R_DD(1) + W_S3(s) + F_W + F_D
+
+The paper fits linear models for F_W/F_D against payload size from the §5.4
+measurements (R² 0.98 / 0.84); we do the same regression against the
+simulated function runtimes in ``benchmarks/bench_cost.py`` and also provide
+the paper's deployment constants here for the break-even analysis.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+from .functions import LAMBDA_GBS_PRICE, LAMBDA_INVOKE_PRICE
+
+# -- storage / queue unit prices (Table 4) -----------------------------------
+R_S3 = 4e-7
+W_S3 = 5e-6
+R_DD_UNIT = 0.25e-6  # per 4 kB read unit
+W_DD_UNIT = 1.25e-6  # per 1 kB write unit
+Q_UNIT = 0.5e-6  # per 64 kB SQS message unit
+
+# -- storage retention (USD per GB-month) -------------------------------------
+S3_GB_MONTH = 0.023
+DDB_GB_MONTH = 0.25
+EBS_GP3_GB_MONTH = 0.08  # ZooKeeper block storage
+
+# -- ZooKeeper VM constants (§6) -----------------------------------------------
+VM_DAILY = {"t3.small": 0.4992, "t3.medium": 0.9984, "t3.large": 1.9968}
+ZK_MIN_VMS = 3   # 2f+1 with f=1
+ZK_S3_DURABILITY_VMS = 9  # to match S3's 11 nines (§6)
+ZK_DISK_GB = 20
+
+
+def r_dd(s_kb: float) -> float:
+    return math.ceil(max(s_kb, 1e-9) / 4.0) * R_DD_UNIT
+
+
+def w_dd(s_kb: float) -> float:
+    return math.ceil(max(s_kb, 1e-9)) * W_DD_UNIT
+
+
+def q(s_kb: float) -> float:
+    return math.ceil(max(s_kb, 1e-9) / 64.0) * Q_UNIT
+
+
+def f(runtime_s: float, memory_mb: int) -> float:
+    return runtime_s * (memory_mb / 1024.0) * LAMBDA_GBS_PRICE + LAMBDA_INVOKE_PRICE
+
+
+@dataclass
+class WriteCostModel:
+    """COST_W with linear function-runtime models  t = a + b * s_kb."""
+
+    writer_a: float = 0.030   # seconds @ 4 B   (Table 3: writer total p50 31.8 ms)
+    writer_b: float = 0.00029  # s/kB            (p50 102.5 ms @ 250 kB)
+    dist_a: float = 0.060     # (Table 3: distributor total p50 62.2 ms)
+    dist_b: float = 0.00028   # (132.6 ms @ 250 kB)
+    memory_mb: int = 512
+
+    def cost_write(self, s_kb: float) -> float:
+        f_w = f(self.writer_a + self.writer_b * s_kb, self.memory_mb)
+        f_d = f(self.dist_a + self.dist_b * s_kb, self.memory_mb)
+        return 2 * q(s_kb) + 3 * w_dd(1.0) + r_dd(1.0) + W_S3 + f_w + f_d
+
+    def cost_read(self, s_kb: float) -> float:
+        return R_S3
+
+
+def faaskeeper_daily_cost(
+    requests_per_day: float,
+    read_fraction: float,
+    s_kb: float = 1.0,
+    model: WriteCostModel = None,
+    stored_gb: float = 1.0,
+) -> float:
+    m = model or WriteCostModel()
+    reads = requests_per_day * read_fraction
+    writes = requests_per_day * (1.0 - read_fraction)
+    storage_daily = stored_gb * S3_GB_MONTH / 30.0
+    return reads * m.cost_read(s_kb) + writes * m.cost_write(s_kb) + storage_daily
+
+
+def zookeeper_daily_cost(
+    vm: str = "t3.small", n_vms: int = ZK_MIN_VMS, disk_gb: int = ZK_DISK_GB
+) -> float:
+    return n_vms * VM_DAILY[vm] + n_vms * disk_gb * EBS_GP3_GB_MONTH / 30.0
+
+
+def break_even_requests_per_day(
+    read_fraction: float, s_kb: float = 1.0,
+    vm: str = "t3.small", n_vms: int = ZK_MIN_VMS,
+) -> float:
+    """Requests/day at which FaaSKeeper cost equals the ZooKeeper deployment."""
+    m = WriteCostModel()
+    zk = zookeeper_daily_cost(vm, n_vms)
+    per_req = read_fraction * m.cost_read(s_kb) + (1 - read_fraction) * m.cost_write(s_kb)
+    storage_daily = 1.0 * S3_GB_MONTH / 30.0
+    return max(0.0, (zk - storage_daily) / per_req)
+
+
+def cost_savings_factor(requests_per_day: float, read_fraction: float = 0.99,
+                        s_kb: float = 1.0, vm: str = "t3.small",
+                        n_vms: int = ZK_MIN_VMS) -> float:
+    fk = faaskeeper_daily_cost(requests_per_day, read_fraction, s_kb)
+    return zookeeper_daily_cost(vm, n_vms) / fk
+
+
+# -- metered (simulation) accounting ------------------------------------------
+
+
+def service_cost_summary(service) -> Dict[str, float]:
+    """USD totals from the SimCloud meters (ops actually performed)."""
+    kv = service.kv
+    queue_cost = 0.0
+    for queues in [service.session_queues.values(), [service.distq]]:
+        for qu in queues:
+            queue_cost += qu.pushes * Q_UNIT  # messages < 64 kB in tests
+    s3_cost = sum(st.reads * R_S3 + st.writes * W_S3 for st in service.data_stores.values())
+    dd_cost = kv.read_units * R_DD_UNIT + kv.write_units * W_DD_UNIT
+    fn_cost = service.runtime.cost_usd()
+    total = queue_cost + s3_cost + dd_cost + fn_cost
+    return {
+        "queue_usd": queue_cost,
+        "s3_usd": s3_cost,
+        "dynamodb_usd": dd_cost,
+        "functions_usd": fn_cost,
+        "total_usd": total,
+    }

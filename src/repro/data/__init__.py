@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticPipeline, make_batch_specs
+
+__all__ = ["DataConfig", "SyntheticPipeline", "make_batch_specs"]

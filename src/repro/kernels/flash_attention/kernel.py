@@ -1,0 +1,109 @@
+"""Flash attention (streaming softmax) Pallas TPU kernel.
+
+Tiling: grid (B*H, S/bq, T/bk), kv-block index innermost (sequential on TPU),
+so the running max / normalizer / accumulator live in VMEM scratch across the
+kv sweep for one q block.  GQA folds the head-group mapping into the k/v
+index_map (h -> h // group).  Causal and sliding-window masking are applied
+per-tile with iota offsets; bq/bk default to 128 to keep the MXU matmul dims
+hardware-aligned and the tile working set (bq*D + 2*bk*D + bq*bk floats)
+well inside the ~16 MB/core VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 bq: int, bk: int, n_k_blocks: int, t_real: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, ...].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, ...].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0, ...].astype(jnp.float32)                  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    i = pl.program_id(1)
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # padded kv rows must be masked explicitly: causality only covers them
+    # when T >= S (hypothesis-found: S=10, T=9 leaked zero-key rows)
+    mask = k_pos < t_real
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _finish():
+        # rows with zero valid keys (possible only for q beyond the kv
+        # horizon under a window) come out as zeros, by convention
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           bq: int = 128, bk: int = 128,
+                           t_real: Optional[int] = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, S, D); k, v: (BH, T, D) — head-group mapping done by ops.py.
+
+    Returns (BH, S, D).  S % bq == 0 and T % bk == 0 (ops.py pads;
+    ``t_real`` is the unpadded kv length so padded rows are masked).
+    """
+    BH, S, D = q.shape
+    T = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    n_k_blocks = T // bk
+    grid = (BH, S // bq, n_k_blocks)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        bq=bq, bk=bk, n_k_blocks=n_k_blocks,
+        t_real=T if t_real is None else t_real)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running normalizer
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""jit'd wrapper: model layout (B,S,H,D) + GQA -> kernel layout (BH,S,D)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, D); k, v: (B, T, Hkv, D) -> (B, S, H, D).
+
+    GQA: repeats each kv head over its query group via the flattened BH dim
+    (pure indexing — no materialized repeat on TPU thanks to the BlockSpec
+    index_map operating on the flattened axis)."""
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3)                    # (B, Hkv, T, D)
+    kf = jnp.repeat(kf, G, axis=1).reshape(B * H, T, D)
+    vf = v.transpose(0, 2, 1, 3)
+    vf = jnp.repeat(vf, G, axis=1).reshape(B * H, T, D)
+
+    # pad sequence dims to block multiples; padded kv rows are masked inside
+    # the kernel via t_real (q padding rows produce garbage, sliced away).
+    bq_ = min(bq, S)
+    bk_ = min(bk, T)
+    pad_s = (-S) % bq_
+    pad_t = (-T) % bk_
+    if pad_s:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_t:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_t), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_t), (0, 0)))
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                 bq=bq_, bk=bk_, t_real=T, interpret=interpret)
+    out = out[:, :S]
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,4 @@
+from .ops import rglru_scan
+from .ref import reference_rglru
+
+__all__ = ["rglru_scan", "reference_rglru"]

@@ -1,0 +1,32 @@
+"""jit'd wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_w", "interpret"))
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, *,
+               block_q: int = 128, block_w: int = 256,
+               interpret: bool = True) -> jnp.ndarray:
+    """a, b: (B, L, W) -> h (B, L, W); pads L and W to block multiples.
+
+    Padding uses a=1, b=0 (identity recurrence) so results are unaffected.
+    """
+    B, L, W = a.shape
+    pad_l = (-L) % block_q
+    pad_w = (-W) % block_w
+    if pad_l:
+        a = jnp.pad(a, ((0, 0), (0, pad_l), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad_l), (0, 0)))
+    if pad_w:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad_w)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad_w)))
+    y = rglru_scan_kernel(a, b, block_q=block_q, block_w=block_w,
+                          interpret=interpret)
+    return y[:, :L, :W]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: sequential diagonal linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_rglru(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t, h_0 = b_0 (zero initial state).
+
+    a, b: (B, L, W) -> (B, L, W); fp32 math."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    B, L, W = a.shape
+    h0 = jnp.zeros((B, W), jnp.float32)
+    _, hs = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(b.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,4 @@
+from .ops import ssd_scan
+from .ref import reference_ssd
+
+__all__ = ["ssd_scan", "reference_ssd"]

@@ -1,0 +1,97 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid (B, H/bh, L/Q); the chunk index is innermost (sequential on TPU), so the
+inter-chunk state (bh, P, N) lives in VMEM scratch across the sweep.  Within
+a chunk the quadratic "attention form" runs on the MXU: the (Q, Q) decay
+kernel, CB^T Gram matrix, and the state outer products are all dense matmuls.
+This is the TPU adaptation of the paper's algorithm: chunk size Q and head
+block bh trade VMEM footprint (Q^2 + 2 Q N + bh P N floats) against MXU
+utilization; Q = 128 aligns every contraction to the systolic array.
+
+vs the pure-XLA path (models/mamba2.py): identical math, but the (Q,Q,H)
+decay tensor never round-trips to HBM — it is built and consumed in VMEM,
+which removes the memory-bound hot spot the roofline analysis flags.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                Q: int, bh: int, n_chunks: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, ...].astype(jnp.float32)          # (Q, bh, P)
+    dt = dt_ref[0, ...].astype(jnp.float32)        # (Q, bh)
+    A = a_ref[...].astype(jnp.float32)             # (bh,)
+    Bm = b_ref[0, ...].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, ...].astype(jnp.float32)         # (Q, N)
+
+    da = dt * A[None, :]                           # (Q, bh) log-decay
+    cums = jnp.cumsum(da, axis=0)                  # inclusive
+
+    # intra-chunk: y[i] += sum_j<=i C_i.B_j * exp(cums_i - cums_j) * dt_j x_j
+    seg = cums[:, None, :] - cums[None, :, :]      # (Q, Q, bh)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(tri[:, :, None], seg, -jnp.inf))  # mask inside exp
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q, Q)
+    w = cb[:, :, None] * L * dt[None, :, :]        # (Q, Q, bh)
+    y = jnp.einsum("ijh,jhp->ihp", w, x)
+
+    # inter-chunk: y[i] += C_i . h_prev * exp(cums_i)
+    h_prev = h_ref[...]                            # (bh, P, N)
+    y += jnp.einsum("in,ih,hpn->ihp", Cm, jnp.exp(cums), h_prev)
+
+    # state update: h = exp(sum da) * h_prev + sum_j exp(cums_last - cums_j) dt_j B_j x_j
+    decay_all = jnp.exp(cums[-1, :])               # (bh,)
+    decay_to_end = jnp.exp(cums[-1:, :] - cums)    # (Q, bh)
+    new_state = jnp.einsum("jh,jn,jhp->hpn", decay_to_end * dt, Bm, x)
+    h_ref[...] = h_prev * decay_all[:, None, None] + new_state
+
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_kernel(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    Bm: jnp.ndarray, Cm: jnp.ndarray, *,
+                    chunk: int = 128, bh: int = 8,
+                    interpret: bool = True) -> jnp.ndarray:
+    """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N) -> y like x.
+
+    L % chunk == 0 and H % bh == 0 (ops.py pads/validates).
+    """
+    B, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    bh = min(bh, H)
+    n_chunks = L // Q
+    grid = (B, H // bh, n_chunks)
+
+    kernel = functools.partial(_ssd_kernel, Q=Q, bh=bh, n_chunks=n_chunks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # x viewed (B, nc, Q, H, P): block (1, Q, bh, P) at (b, c, hb)
+            pl.BlockSpec((1, Q, bh, Pd), lambda b, hb, c: (b, c, hb, 0)),
+            pl.BlockSpec((1, Q, bh), lambda b, hb, c: (b, c, hb)),
+            pl.BlockSpec((bh,), lambda b, hb, c: (hb,)),
+            pl.BlockSpec((1, Q, N), lambda b, hb, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, hb, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, bh, Pd), lambda b, hb, c: (b, c, hb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, H, Pd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,37 @@
+"""jit'd wrapper for the SSD scan kernel (padding + head blocking)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bh", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, *,
+             chunk: int = 128, bh: int = 8,
+             interpret: bool = True) -> jnp.ndarray:
+    """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N).
+
+    Pads L to a chunk multiple (dt=0 on padding => decay 1, zero input) and
+    H to a head-block multiple (A=0 rows are inert), then calls the kernel.
+    """
+    B, L, H, Pd = x.shape
+    pad_l = (-L) % chunk
+    pad_h = (-H) % bh
+    if pad_l:
+        x = jnp.pad(x, ((0, 0), (0, pad_l), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_l), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad_l), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad_l), (0, 0)))
+    if pad_h:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_h), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad_h)))
+        A = jnp.pad(A, (0, pad_h))
+    y = ssd_scan_kernel(x, dt, A, Bm, Cm, chunk=chunk, bh=bh,
+                        interpret=interpret)
+    return y[:, :L, :H]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: sequential (non-chunked) SSD recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                  Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """Token-by-token recurrence (the definitional form).
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N) -> (B, L, H, P).
+    """
+    B, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * A[None, :])
+        h = h * da[:, :, None, None] + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, Pd, N), f32)
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bm.astype(f32), 1, 0), jnp.moveaxis(Cm.astype(f32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax import): jax locks the
+device count at first init, and the production meshes need 512 placeholder
+host devices.  Do not set the flag anywhere global — smoke tests and benches
+see 1 device.
+
+For each cell this driver:
+  1. builds abstract params / optimizer / cache trees via ``jax.eval_shape``
+     (ShapeDtypeStruct stand-ins — nothing is ever allocated),
+  2. assigns NamedShardings from dist/sharding.py,
+  3. ``jax.jit(step).lower(...)`` -> ``.compile()`` under the target mesh,
+  4. records memory_analysis / cost_analysis / per-collective wire bytes
+     (launch/hlo_analysis.py) for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..data.pipeline import make_batch_specs
+from ..dist import sharding as shd
+from ..models import build_model
+from ..models.config import SHAPES_BY_NAME, ArchConfig, ShapeSpec
+from ..serve.engine import make_decode_step, make_prefill
+from ..train.optim import AdamWConfig
+from ..train.step import TrainStepConfig, init_train_state, make_train_step
+from . import hlo_analysis
+from .mesh import HBM_PER_CHIP, make_production_mesh
+
+
+def _sds(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def abstract_params(model) -> Any:
+    return _sds(jax.eval_shape(model.init, jax.random.key(0)))
+
+
+def _extra_prefill_args(cfg: ArchConfig, shape: ShapeSpec):
+    B = shape.global_batch
+    if cfg.family == "audio":
+        d = cfg.encdec.frame_dim or cfg.d_model
+        return (jax.ShapeDtypeStruct((B, cfg.encdec.n_frames, d), jnp.float32),)
+    if cfg.family == "vlm":
+        d = cfg.vlm.patch_dim or cfg.d_model
+        return (jax.ShapeDtypeStruct((B, cfg.vlm.n_patches, d), jnp.float32),)
+    return ()
+
+
+# per-device microbatch token cap: 8192 keeps every train cell's transients
+# (scores, CE, MoE dispatch buffers) within HBM even under the CPU backend's
+# no-donation double-counting (§Perf cell-2 iteration 3: accum 4 -> 8 cut
+# qwen3-moe temp 24.7 -> 20.5 GB and wire -24 %)
+TOKENS_PER_DEV_MICROBATCH = 8192
+
+
+def default_accum_steps(cfg: ArchConfig, shape: ShapeSpec, dp_size: int) -> int:
+    """Gradient-accumulation depth: cap per-device microbatch tokens so
+    activation transients (scores, CE, dispatch buffers) fit 16 GB HBM."""
+    tokens_per_dev = shape.global_batch // dp_size * shape.seq_len
+    accum = max(1, tokens_per_dev // TOKENS_PER_DEV_MICROBATCH)
+    while shape.global_batch // dp_size % accum != 0 and accum > 1:
+        accum -= 1
+    return min(accum, shape.global_batch // dp_size)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               step_cfg: Optional[TrainStepConfig] = None,
+               optim_cfg: AdamWConfig = AdamWConfig(),
+               cfg_overrides: Optional[Dict] = None,
+               policy_kw: Optional[Dict] = None,
+               donate: bool = True):
+    """Returns (lowered, meta) for one cell."""
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape_name not in cfg.shapes:
+        raise ValueError(f"{arch} skips {shape_name} (cfg.shapes={cfg.shapes})")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    p_abs = abstract_params(model)
+    p_sh = shd.param_shardings(p_abs, mesh)
+    attn_mode = "head" if cfg.n_kv_heads % mesh.shape["model"] == 0 else "seq"
+    pkw = dict(policy_kw or {})
+    if shape.kind == "decode":
+        pkw.setdefault("decode_stationary", True)
+    policy = shd.ShardingPolicy.default(
+        mesh, batch_shardable=shape.global_batch % _dp_size(mesh) == 0,
+        attn_mode=attn_mode, **pkw)
+
+    if step_cfg is None:
+        step_cfg = TrainStepConfig(
+            accum_steps=default_accum_steps(cfg, shape, _dp_size(mesh)))
+
+    with shd.activation_sharding(policy):
+        if shape.kind == "train":
+            batch_abs = make_batch_specs(cfg, shape)
+            b_sh = shd.batch_shardings(batch_abs, mesh)
+            o_abs = _sds(jax.eval_shape(
+                lambda p: init_train_state(model, p, step_cfg), p_abs))
+            o_sh = _opt_shardings(o_abs, p_sh, mesh)
+            step = make_train_step(model, optim_cfg, step_cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1) if donate else ())
+            with mesh:
+                lowered = jitted.lower(p_abs, o_abs, batch_abs)
+        elif shape.kind == "prefill":
+            tok_abs = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+            extra = _extra_prefill_args(cfg, shape)
+            t_sh = shd.batch_shardings({"tokens": tok_abs}, mesh)["tokens"]
+            e_sh = tuple(shd.batch_shardings({"patch_embeds": e}, mesh)["patch_embeds"]
+                         for e in extra)
+            step = make_prefill(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, t_sh) + e_sh)
+            with mesh:
+                lowered = jitted.lower(p_abs, tok_abs, *extra)
+        else:  # decode
+            B = shape.global_batch
+            cache_abs = _sds(jax.eval_shape(
+                lambda: model.init_cache(B, shape.seq_len)))
+            c_sh = shd.cache_shardings(cache_abs, mesh)
+            tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            t_sh = shd.batch_shardings({"tokens": tok_abs}, mesh)["tokens"]
+            step = make_decode_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                             donate_argnums=(1,) if donate else ())
+            with mesh:
+                lowered = jitted.lower(p_abs, cache_abs, tok_abs)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": 512 if multi_pod else 256,
+            "param_count": cfg.param_count(),
+            "active_params": cfg.param_count(active_only=True),
+            "accum_steps": step_cfg.accum_steps if shape.kind == "train" else None,
+            "attn_mode": attn_mode,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+    return lowered, meta
+
+
+def _dp_size(mesh) -> int:
+    return int(jnp.prod(jnp.array(
+        [mesh.shape[a] for a in mesh.axis_names if a in ("pod", "data")])))
+
+
+def _opt_shardings(o_abs, p_sh, mesh):
+    """Moments mirror parameter shardings; scalars replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def build(sub):
+        return jax.tree_util.tree_map(lambda s: s, p_sh)
+
+    out = {}
+    for k, v in o_abs.items():
+        if k in ("mu", "nu", "compress_residual"):
+            out[k] = build(v)
+        else:
+            out[k] = jax.tree_util.tree_map(
+                lambda x: NamedSharding(mesh, P()), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell execution & reporting
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             compile_cell: bool = True, **kw) -> Dict:
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod, **kw)
+    except Exception as e:  # noqa: BLE001
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "LOWER_FAIL", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    rec = dict(meta)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    if not compile_cell:
+        rec["status"] = "LOWERED"
+        return rec
+    t1 = time.time()
+    try:
+        compiled = lowered.compile()
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="COMPILE_FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec["status"] = "OK"
+
+    # --- memory ---------------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        arg_b = rec["memory"]["argument_bytes"] or 0
+        tmp_b = rec["memory"]["temp_bytes"] or 0
+        rec["memory"]["per_device_total"] = arg_b + tmp_b
+        rec["memory"]["fits_hbm"] = (arg_b + tmp_b) <= HBM_PER_CHIP
+    except Exception as e:  # noqa: BLE001
+        rec["memory"] = {"error": str(e)}
+
+    # --- cost / flops ------------------------------------------------------------
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["hbm_bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # noqa: BLE001
+        rec["cost_error"] = str(e)
+        rec["flops_per_device"] = 0.0
+        rec["hbm_bytes_per_device"] = 0.0
+
+    # --- collectives -----------------------------------------------------------
+    try:
+        text = compiled.as_text()
+        stats = hlo_analysis.collective_stats(text)
+        rec["collectives"] = {
+            "bytes_by_kind": stats.bytes_by_kind,
+            "count_by_kind": stats.count_by_kind,
+            "wire_bytes_per_device": stats.wire_bytes,
+        }
+    except Exception as e:  # noqa: BLE001
+        rec["collectives"] = {"error": str(e)}
+    return rec
+
+
+def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
+               compile_cell: bool = True, **kw):
+    results = []
+    archs = archs or configs.list_archs()
+    for arch in archs:
+        cfg = configs.get(arch)
+        for shape_name in (shapes or cfg.shapes):
+            if shape_name not in cfg.shapes:
+                continue
+            for multi_pod in ([False, True] if mesh_mode == "both"
+                              else [mesh_mode == "multi"]):
+                print(f"=== {arch} x {shape_name} x "
+                      f"{'2x16x16' if multi_pod else '16x16'} ===", flush=True)
+                rec = run_cell(arch, shape_name, multi_pod=multi_pod,
+                               compile_cell=compile_cell, **kw)
+                print(json.dumps(_summary(rec)), flush=True)
+                results.append(rec)
+    return results
+
+
+def _summary(rec: Dict) -> Dict:
+    out = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status",
+                                   "lower_s", "compile_s")}
+    if rec.get("status") == "OK":
+        out["flops/dev"] = f"{rec['flops_per_device']:.3e}"
+        mem = rec.get("memory", {})
+        if mem.get("per_device_total"):
+            out["mem/dev_GB"] = round(mem["per_device_total"] / 2**30, 2)
+        coll = rec.get("collectives", {})
+        out["wire_MB/dev"] = round(coll.get("wire_bytes_per_device", 0) / 2**20, 1)
+    else:
+        out["error"] = rec.get("error")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        results = run_matrix(args.mesh, compile_cell=not args.no_compile)
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        cfg = configs.get(args.arch)
+        shapes = [args.shape] if args.shape else list(cfg.shapes)
+        results = run_matrix(args.mesh, archs=[args.arch], shapes=shapes,
+                             compile_cell=not args.no_compile)
+    n_ok = sum(1 for r in results if r.get("status") == "OK")
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""HLO-text analysis: collective-traffic accounting + roofline terms.
+
+``compiled.as_text()`` for an SPMD-partitioned module is *per-device*: every
+collective op's result shape is the per-device buffer.  We sum bytes per
+collective category with a simple wire model (documented in EXPERIMENTS.md):
+
+    all-gather          : result bytes       (each device receives ~result)
+    all-to-all          : result bytes
+    collective-permute  : result bytes
+    all-reduce          : 2 x result bytes   (reduce-scatter + all-gather ring)
+    reduce-scatter      : operand bytes      (each device sends ~input once)
+
+Roofline terms (seconds, per step):
+    compute    = HLO_FLOPs_total / (chips * peak)
+    memory     = HLO_bytes_total / (chips * hbm_bw)
+    collective = per_device_wire_bytes / ici_bw
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' shape string; tuples summed by caller."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str, kind: str) -> int:
+    """Sum the result-type shapes of an HLO instruction line (handles tuples).
+
+    The result type is everything between '=' and the op name."""
+    parts = line.split("=", 1)
+    if len(parts) != 2:
+        return 0
+    rhs = parts[1]
+    idx = re.search(rf"\b{kind}(-start)?\(", rhs)
+    if idx is None:
+        return 0
+    typestr = rhs[: idx.start()]
+    return sum(_shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(typestr))
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: int = 0     # per-device, wire-model-weighted
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            for kind in _COLLECTIVES:
+                # match op name with optional '-start'/'-done' suffix
+                if re.search(rf"= .*\b{kind}(-start)?\(", s):
+                    if f"{kind}-done" in s:
+                        continue  # avoid double-count of async pairs
+                    b = _result_bytes(s, kind)
+                    stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+                    stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+                    mult = 2 if kind == "all-reduce" else 1
+                    stats.wire_bytes += mult * b
+                    break
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    wire_bytes_per_device: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def mfu_bound(self, model_flops: float) -> float:
+        """Achievable MFU upper bound implied by the three terms."""
+        if self.bound_s <= 0:
+            return 0.0
+        return model_flops / (self.n_chips * PEAK_FLOPS_BF16 * self.bound_s)
+
+
+def roofline(flops_total: float, hbm_bytes_total: float,
+             wire_bytes_per_device: float, n_chips: int,
+             peak=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_total / (n_chips * peak),
+        memory_s=hbm_bytes_total / (n_chips * hbm_bw),
+        collective_s=wire_bytes_per_device / ici_bw,
+        flops=flops_total,
+        hbm_bytes=hbm_bytes_total,
+        wire_bytes_per_device=wire_bytes_per_device,
+        n_chips=n_chips,
+    )

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod = (16, 16) = 256 chips (one TPU v5e pod slice);
+multi-pod = (2, 16, 16) = 512 chips, with the leading ``pod`` axis used for
+hierarchical data parallelism (reduce-scatter intra-pod over ICI, all-reduce
+inter-pod over DCI).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh for CPU smoke tests of the sharded code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators; EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~4 links/chip on a 2d torus)
+HBM_PER_CHIP = 16 * 1024**3    # 16 GB

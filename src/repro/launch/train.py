@@ -1,0 +1,154 @@
+"""End-to-end training driver with FaaSKeeper coordination.
+
+This is the runnable (CPU-scale) counterpart of the dry-run: it trains a
+reduced config for real while exercising the full control plane —
+ephemeral-znode membership, transactional checkpoint manifests, progress
+reporting, straggler scanning, and crash/restart recovery.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --steps 50 \
+      --smoke --ckpt-dir /tmp/ckpt [--resume] [--simulate-failure 20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from .. import configs
+from ..checkpoint import CheckpointStore
+from ..coord import CoordinatedManifest, MembershipService, StragglerDetector
+from ..core import FaaSKeeperService, SimCloud
+from ..data import DataConfig, SyntheticPipeline
+from ..models import build_model
+from ..models.config import ShapeSpec
+from ..train import AdamWConfig, make_train_step
+from ..train.step import TrainStepConfig, init_train_state
+
+
+def build_control_plane():
+    cloud = SimCloud(seed=0)
+    service = FaaSKeeperService(cloud)
+    return cloud, service
+
+
+def run_training(arch: str, steps: int = 50, *, smoke: bool = True,
+                 ckpt_dir: Optional[str] = None, resume: bool = False,
+                 ckpt_every: int = 20, simulate_failure: Optional[int] = None,
+                 seq_len: int = 64, global_batch: int = 8,
+                 lr: float = 3e-3, log_every: int = 10,
+                 schedule: Optional[str] = None):
+    cfg = configs.get(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    shape = ShapeSpec("driver", seq_len, global_batch, "train")
+    pipe = SyntheticPipeline(cfg, shape, DataConfig(seed=0))
+
+    # -- control plane ---------------------------------------------------------
+    cloud, service = build_control_plane()
+    cp_state = os.path.join(ckpt_dir, "control_plane.pkl") if ckpt_dir else None
+    if resume and cp_state and os.path.exists(cp_state):
+        # fresh functions attach to the durable storage of the previous run
+        with open(cp_state, "rb") as f:
+            service.load_storage(f.read())
+    membership = MembershipService(service)
+    worker = membership.join("worker-0", {"devices": jax.device_count()})
+    stragglers = StragglerDetector(service)
+    manifest = CoordinatedManifest(service, job=f"train-{arch}")
+
+    def persist_control_plane(step: int, m) -> None:
+        manifest.commit(step, m)
+        if cp_state:
+            tmp = cp_state + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(service.snapshot_storage())
+            os.replace(tmp, cp_state)
+
+    store = None
+    if ckpt_dir:
+        store = CheckpointStore(ckpt_dir, committer=persist_control_plane,
+                                latest_resolver=manifest.latest)
+
+    # -- data plane ---------------------------------------------------------------
+    schedule = schedule or ("wsd" if arch.startswith("minicpm") else "cosine")
+    optim = AdamWConfig(lr=lr, total_steps=steps, warmup_steps=max(1, steps // 10),
+                        schedule=schedule)
+    step_cfg = TrainStepConfig()
+    params = model.init(jax.random.key(0))
+    state = init_train_state(model, params, step_cfg)
+    start_step = 0
+    if resume and store is not None:
+        try:
+            restored, start_step = store.restore({"params": params, "opt": state})
+            params, state = restored["params"], restored["opt"]
+            print(f"[coord] resumed from committed checkpoint step {start_step} "
+                  f"(txid-ordered manifest via FaaSKeeper)")
+        except FileNotFoundError:
+            print("[coord] no committed checkpoint; starting fresh")
+    train_step = jax.jit(make_train_step(model, optim, step_cfg))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        if simulate_failure is not None and step == simulate_failure and not resume:
+            print(f"[fault] simulating worker crash at step {step} "
+                  f"(restart with --resume to recover)")
+            membership.fail(worker)
+            service.start_heartbeat(period=5.0, max_runs=3)
+            cloud.run()
+            print(f"[coord] members after eviction: {membership.members()}")
+            return {"crashed_at": step, "losses": losses}
+        batch = pipe.host_batch(step)
+        params, state, metrics = train_step(params, state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        stragglers.report("worker-0", step)
+        if (step + 1) % log_every == 0:
+            print(f"step {step+1:5d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e} "
+                  f" gnorm {float(metrics['grad_norm']):.3f}")
+        if store is not None and (step + 1) % ckpt_every == 0:
+            store.save_async(step + 1, {"params": params, "opt": state})
+    if store is not None:
+        store.wait()
+    rep = stragglers.scan()
+    dt = time.time() - t0
+    print(f"done: {len(losses)} steps in {dt:.1f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(chain floor {pipe.optimal_loss():.3f}); stragglers: {rep.lagging}")
+    membership.leave(worker)
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "optimal_loss": pipe.optimal_loss(),
+            "coord_cost_usd": service.cost_summary()["total_usd"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="full config (needs a real fleet; CPU will OOM)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    run_training(args.arch, args.steps, smoke=args.smoke, ckpt_dir=args.ckpt_dir,
+                 resume=args.resume, ckpt_every=args.ckpt_every,
+                 simulate_failure=args.simulate_failure, seq_len=args.seq_len,
+                 global_batch=args.global_batch, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Data-plane model zoo: the ten assigned architectures.
+
+``build_model(cfg)`` dispatches on ``cfg.family`` and returns an object with
+the uniform interface::
+
+    init(key) -> params
+    apply(params, batch) -> logits                  # training forward
+    loss_aux(params, batch) -> (logits, aux_loss)   # + MoE balance loss
+    init_cache(B, seq_len) -> cache
+    decode_step(params, cache, tokens) -> (logits, cache)
+    prefill(params, tokens) -> (logits, cache)
+"""
+
+from .config import (
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    ArchConfig,
+    EncDecConfig,
+    HybridConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    VLMConfig,
+    shapes_for,
+)
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense",):
+        from .transformer import DenseLM
+
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from .moe import MoELM
+
+        return MoELM(cfg)
+    if cfg.family == "ssm":
+        from .mamba2 import Mamba2LM
+
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from .rglru import RecurrentLM
+
+        return RecurrentLM(cfg)
+    if cfg.family == "audio":
+        from .whisper import EncDecLM
+
+        return EncDecLM(cfg)
+    if cfg.family == "vlm":
+        from .vlm import VisionLM
+
+        return VisionLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+__all__ = [
+    "ALL_SHAPES",
+    "SHAPES_BY_NAME",
+    "ArchConfig",
+    "EncDecConfig",
+    "HybridConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeSpec",
+    "VLMConfig",
+    "build_model",
+    "shapes_for",
+]

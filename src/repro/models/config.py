@@ -1,0 +1,236 @@
+"""Architecture configuration for the data plane.
+
+One :class:`ArchConfig` instance fully describes a model family member; the
+ten assigned architectures live in :mod:`repro.configs` as module-level
+constants built from this dataclass.  ``reduced()`` produces the smoke-test
+scale of the same family (same code paths, tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell of the assignment matrix."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int           # hidden width of a single expert FFN
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style block pattern: ``pattern`` repeated over layers.
+
+    'r' = RG-LRU recurrent block, 'a' = local-attention block.
+    """
+
+    pattern: str = "rra"
+    lru_width: Optional[int] = None     # defaults to d_model
+    local_window: int = 2048
+    d_conv: int = 4
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    n_encoder_layers: int
+    n_frames: int = 1500        # whisper-base: 30 s of audio after conv stub
+    frame_dim: Optional[int] = None  # dims of the precomputed frame embeddings
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    n_patches: int = 256        # precomputed ViT patch embeddings (stub frontend)
+    patch_dim: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None       # default d_model // n_heads
+    mlp: str = "swiglu"                  # swiglu | gelu | geglu
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    qk_norm: bool = False                # qwen3
+    qkv_bias: bool = False               # qwen1.5, starcoder2
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None  # starcoder2 = 4096
+    emb_scale: float = 1.0               # minicpm scale_emb
+    residual_scale: float = 1.0          # minicpm scale_depth / sqrt(L)
+    logit_scale: float = 1.0             # minicpm d_model/dim_model_base scaling
+    tie_embeddings: bool = False
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+
+    # which assignment shapes apply (decode skipped for enc-only, long_500k
+    # skipped for pure full-attention archs — DESIGN.md §Arch-applicability)
+    shapes: Tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+
+    # scan-over-layers (compile-time/HLO-size control; always true at scale)
+    scan_layers: bool = True
+    remat: str = "full"                  # none | full | dots  (hillclimb lever)
+
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.the_head_dim()
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so logits always vocab-shard on the model
+        axis (and embedding rows stay MXU-aligned).  lm_head masks the pad."""
+        return -(-self.vocab // 256) * 256
+
+    def the_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def sub_quadratic(self) -> bool:
+        return (
+            self.family in ("ssm", "hybrid")
+            or self.sliding_window is not None
+        )
+
+    # ----- parameter counting (for roofline MODEL_FLOPS = 6·N·D) -------------
+
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.the_head_dim()
+        q_dim, kv = self.n_heads * hd, self.n_kv_heads * hd
+
+        def attn_params() -> int:
+            return d * (q_dim + 2 * kv) + q_dim * d
+
+        def mlp_params(width: int) -> int:
+            return d * width * (3 if self.mlp in ("swiglu", "geglu") else 2)
+
+        n = 0
+        if self.family == "ssm":
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            # in_proj -> [z, x, B, C, dt], conv over (x,B,C), out_proj
+            n_bc = 2 * s.d_state
+            n += d * (2 * di + n_bc + nh)            # in_proj
+            n += (di + n_bc) * s.d_conv              # conv1d
+            n += di * d                              # out_proj
+            n += nh * 2 + di                         # A_log, dt_bias, norm-ish
+            n *= self.n_layers
+        elif self.family == "hybrid":
+            h = self.hybrid
+            lw = h.lru_width or d
+            pat = layer_pattern(self)
+            n_r = pat.count("r")
+            n_a = pat.count("a")
+            rec = d * lw * 2 + lw * h.d_conv + lw * d + 3 * lw  # x/y proj, conv, out, gates-ish
+            rec += 2 * lw * (lw // 8)  # rg-lru input/recurrence gates (block-diag, 8 blocks)
+            n += n_r * rec + n_a * attn_params()
+            n += self.n_layers * mlp_params(f)
+        else:
+            per_layer = attn_params()
+            if self.family == "moe" and self.moe is not None:
+                m = self.moe
+                experts = m.n_experts * d * m.d_expert * (3 if self.mlp == "swiglu" else 2)
+                router = d * m.n_experts
+                if active_only:
+                    experts = m.top_k * d * m.d_expert * (3 if self.mlp == "swiglu" else 2)
+                per_layer += experts + router
+            else:
+                per_layer += mlp_params(f)
+            n = self.n_layers * per_layer
+            if self.family == "audio" and self.encdec is not None:
+                # encoder layers: self-attn + mlp; decoder adds cross-attn
+                enc = self.encdec.n_encoder_layers * (attn_params() + mlp_params(f))
+                n += enc + self.n_layers * attn_params()  # cross-attn in decoder
+        n += self.vocab * d * (1 if self.tie_embeddings else 2)  # embed + head
+        return n
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw: Dict = dict(
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 4) if self.family != "hybrid" else 3,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128,
+            vocab=256,
+            head_dim=16,
+            scan_layers=self.scan_layers,
+            remat="none",
+        )
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(n_experts=4, top_k=2, d_expert=32,
+                                  capacity_factor=self.moe.capacity_factor)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=8)
+        if self.hybrid is not None:
+            kw["hybrid"] = HybridConfig(pattern=self.hybrid.pattern, lru_width=64,
+                                        local_window=8, d_conv=4)
+        if self.encdec is not None:
+            kw["encdec"] = EncDecConfig(n_encoder_layers=2, n_frames=8, frame_dim=64)
+        if self.vlm is not None:
+            kw["vlm"] = VLMConfig(n_patches=4, patch_dim=64)
+        return dataclasses.replace(self, **kw)
+
+
+def layer_pattern(cfg: ArchConfig) -> str:
+    """Expanded per-layer kind string for hybrid archs, e.g. 'rrarra...'."""
+    assert cfg.hybrid is not None
+    p = cfg.hybrid.pattern
+    return (p * math.ceil(cfg.n_layers / len(p)))[: cfg.n_layers]
+
+
+def shapes_for(cfg: ArchConfig) -> List[ShapeSpec]:
+    return [SHAPES_BY_NAME[s] for s in cfg.shapes]

@@ -1,0 +1,59 @@
+"""Decode-time caches.
+
+A cache layer is a dict:
+  k, v      : (B, T, Hkv, D)  ring buffer (T = window for SWA archs)
+  positions : (B, T) int32    absolute position stored in each slot (-1 empty)
+
+Stacked over layers (leading L dim) so that decode can ``lax.scan`` over the
+layer stack.  ``positions`` doubles as the validity mask, which makes full and
+sliding-window caches the same code path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE
+
+
+def init_attn_cache(n_layers: int, B: int, T: int, n_kv: int, head_dim: int) -> Dict:
+    return {
+        "k": jnp.zeros((n_layers, B, T, n_kv, head_dim), COMPUTE_DTYPE),
+        "v": jnp.zeros((n_layers, B, T, n_kv, head_dim), COMPUTE_DTYPE),
+        "positions": -jnp.ones((n_layers, B, T), jnp.int32),
+        "length": jnp.zeros((), jnp.int32),  # absolute position of next token
+    }
+
+
+def cache_update_layer(layer_cache: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                       pos: jnp.ndarray) -> Dict:
+    """Insert S_new tokens at absolute position ``pos`` (ring for windows).
+
+    layer_cache k/v: (B, T, Hkv, D); k_new/v_new: (B, S, Hkv, D).
+    """
+    T = layer_cache["k"].shape[1]
+    S = k_new.shape[1]
+    if S > T:
+        # prefill longer than the (windowed) cache: only the trailing T
+        # tokens can ever be attended to — drop the rest (static slice, and
+        # it keeps the ring scatter free of duplicate slots).
+        k_new, v_new = k_new[:, -T:], v_new[:, -T:]
+        pos = pos + (S - T)
+        S = T
+    abs_pos = pos + jnp.arange(S, dtype=jnp.int32)            # (S,)
+    slots = abs_pos % T                                       # ring slots
+    k = layer_cache["k"].at[:, slots].set(k_new.astype(layer_cache["k"].dtype))
+    v = layer_cache["v"].at[:, slots].set(v_new.astype(layer_cache["v"].dtype))
+    positions = layer_cache["positions"].at[:, slots].set(
+        jnp.broadcast_to(abs_pos[None, :], (k_new.shape[0], S))
+    )
+    return {"k": k, "v": v, "positions": positions}
+
+
+def cache_kv_view(layer_cache: Dict) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (k, v, kv_positions, kv_valid) for sdpa()."""
+    pos = layer_cache["positions"]
+    return layer_cache["k"], layer_cache["v"], pos, pos >= 0

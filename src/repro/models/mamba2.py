@@ -1,0 +1,280 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward: within a chunk of length Q the quadratic "attention-like"
+form is used (dense matmuls — MXU-friendly), states are carried across chunks
+with a first-order recurrence.  This is the TPU adaptation of the paper's
+algorithm: chunk size is a VMEM/MXU tile knob, and the Pallas kernel in
+``repro.kernels.ssd_scan`` implements the same math with explicit BlockSpecs.
+
+Decode keeps an O(1) recurrent state — this is why mamba2 runs the
+``long_500k`` cell that full-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers
+from .config import ArchConfig
+from .layers import cast, wcast
+from .transformer import DenseLM
+
+
+# ---------------------------------------------------------------------------
+# SSD core (pure JAX; mirrored by kernels/ssd_scan)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a full sequence.
+
+    x : (B, L, H, P)    per-head inputs
+    dt: (B, L, H)       softplus-ed step sizes (>= 0; 0 on padding)
+    A : (H,)            negative decay rates
+    Bm: (B, L, N)       input projections (ngroups=1, shared across heads)
+    Cm: (B, L, N)       output projections
+    h0: (B, H, P, N)    optional initial state
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 => decay 1, input 0
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, Pd).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    da = dtc * A.astype(f32)[None, None, None, :]          # (B,nc,Q,H) log-decay
+    cums = jnp.cumsum(da, axis=2)                          # inclusive cumsum
+
+    # ---- intra-chunk (quadratic within chunk) -----------------------------
+    # L_mat[i,j] = exp(cums_i - cums_j) for i >= j else 0.  The mask goes
+    # INSIDE the exp: for i < j the difference is positive and can overflow,
+    # and where(mask, exp(big), 0) still propagates NaN through the grad.
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], seg, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (B,nc,Q,Q)
+    w = cb[..., None] * Lmat * dtc[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)      # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                        decay_to_end * dtc, Bc, xc)        # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(cums[:, :, -1, :])               # (B,nc,H)
+
+    def step(h, inp):
+        d, s = inp                                         # (B,H), (B,H,P,N)
+        h = h * d[:, :, None, None] + s
+        return h, h
+
+    init = jnp.zeros((Bsz, H, Pd, N), f32) if h0 is None else h0.astype(f32)
+    hs_final, hs = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prev = jnp.concatenate([init[None], hs[:-1]], axis=0)  # state entering chunk c
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(cums), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, Lp, H, Pd)[:, :L]
+    return y.astype(x.dtype), hs_final
+
+
+def ssd_decode_step(h: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    A: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent update.  h: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bm, Cm: (B,N)."""
+    f32 = jnp.float32
+    da = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])            # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(f32), Bm.astype(f32), x.astype(f32))
+    h = h * da[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(f32), h)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    d_xbc = di + 2 * s.d_state  # conv covers [x, B, C]
+    return s, di, nh, d_xbc
+
+
+def init_mamba_layer(key, cfg: ArchConfig) -> Dict:
+    s, di, nh, d_xbc = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * s.d_state + nh  # z, x, B, C, dt
+    return {
+        "norm": layers.init_norm(cfg.norm, cfg.d_model),
+        "ssm": {
+            "in_proj": layers.dense_init(ks[0], cfg.d_model, d_in_proj),
+            "conv_w": (0.1 * jax.random.normal(ks[1], (s.d_conv, d_xbc))).astype(layers.PARAM_DTYPE),
+            "conv_b": jnp.zeros((d_xbc,), layers.PARAM_DTYPE),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(layers.PARAM_DTYPE),
+            "dt_bias": jnp.zeros((nh,), layers.PARAM_DTYPE),
+            "D": jnp.ones((nh,), layers.PARAM_DTYPE),
+            "norm": jnp.ones((di,), layers.PARAM_DTYPE),
+            "out_proj": layers.dense_init(ks[2], di, cfg.d_model),
+        },
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 carry: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  xbc: (B,L,C); w: (K,C).  ``carry`` (B,K-1,C)
+    provides left context in decode mode."""
+    K = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = carry.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * cast(w[i]) for i in range(K))
+    return jax.nn.silu(out + cast(b))
+
+
+def mamba_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+              state: Optional[Dict] = None, want_state: bool = False
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Sequence-mixing half of the block.
+
+    ``state`` given & L==1 -> recurrent decode step.
+    ``want_state``         -> also return the final state (prefill).
+    """
+    s, di, nh, d_xbc = _dims(cfg)
+    B_, L, _ = x.shape
+    proj = jnp.einsum("bld,dp->blp", x, wcast(p["in_proj"], "col"))
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1
+    )
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+
+    decode = state is not None and L == 1
+    carry = state["conv"] if decode else None
+    conv_in = xbc
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], carry=carry)
+    new_state: Optional[Dict] = None
+    if decode or want_state:
+        prev = carry if decode else jnp.zeros((B_, s.d_conv - 1, d_xbc), conv_in.dtype)
+        tail = jnp.concatenate([prev.astype(conv_in.dtype), conv_in], axis=1)[:, -(s.d_conv - 1):]
+        new_state = {"conv": tail}
+
+    xs, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    xh = xs.reshape(B_, L, nh, s.head_dim)
+    xh = constrain(xh, "ssm_heads")
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dtp = constrain(dtp, "ssm_dt")  # H-shard the decay tensors (and with them
+    # the (Q,Q,H) intra-chunk tensors, the SSD memory hot spot)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        y, h = ssd_decode_step(state["ssm"], xh[:, 0], dtp[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+        new_state["ssm"] = h
+    else:
+        y, hfin = ssd_chunked(xh, dtp, A, Bm, Cm, min(cfg.ssm.chunk, L))
+        if want_state:
+            new_state["ssm"] = hfin
+
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, L, di)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)  # grouped rmsnorm (single group)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm"]).astype(x.dtype)
+    return jnp.einsum("bli,id->bld", y, wcast(p["out_proj"], "row")), new_state
+
+
+class Mamba2LM(DenseLM):
+    """Attention-free; the paper's coordination technique applies unchanged
+    (DESIGN.md §Arch-applicability) — only the sequence mixer differs."""
+
+    def _init_layer(self, key):
+        return init_mamba_layer(key, self.cfg)
+
+    def _layer_fwd(self, p, x, positions):
+        h = layers.apply_norm(self.cfg.norm, p["norm"], x)
+        h, _ = mamba_mix(p["ssm"], self.cfg, h)
+        return constrain(x + h, "activation")
+
+    # -- decode ---------------------------------------------------------------
+
+    def init_cache(self, B: int, seq_len: int) -> Dict:
+        s, di, nh, d_xbc = _dims(self.cfg)
+        L = self.cfg.n_layers
+        return {
+            "conv": jnp.zeros((L, B, s.d_conv - 1, d_xbc), layers.COMPUTE_DTYPE),
+            "ssm": jnp.zeros((L, B, nh, s.head_dim, s.d_state), jnp.float32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def _stack_step(self, params, cache, tokens, layer_fn):
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embedding"], cfg, tokens)
+        layer_caches = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(layer_fn, x, (params["layers"], layer_caches))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                x, nc = layer_fn(x, (p, lc))
+                outs.append(nc)
+            new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = layers.lm_head(params["embedding"], cfg, x)
+        new_cache = dict(new_caches)
+        new_cache["length"] = cache["length"] + tokens.shape[1]
+        return constrain(logits, "logits"), new_cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+
+        def body(h, layer_in):
+            p, lc = layer_in
+            hn = layers.apply_norm(cfg.norm, p["norm"], h)
+            out, new_lc = mamba_mix(p["ssm"], cfg, hn, state=lc)
+            return h + out, new_lc
+
+        return self._stack_step(params, cache, tokens, body)
+
+    def prefill(self, params, tokens):
+        cfg = self.cfg
+        cache = self.init_cache(tokens.shape[0], tokens.shape[1])
+
+        def body(h, layer_in):
+            p, _lc = layer_in
+            hn = layers.apply_norm(cfg.norm, p["norm"], h)
+            out, new_lc = mamba_mix(p["ssm"], cfg, hn, want_state=True)
+            return h + out, new_lc
+
+        return self._stack_step(params, cache, tokens, body)

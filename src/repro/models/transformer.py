@@ -1,0 +1,213 @@
+"""Dense decoder-only transformer (starcoder2 / qwen3 / qwen1.5 / minicpm,
+and the LM backbone of internvl2).
+
+Layer stack is a ``lax.scan`` over stacked per-layer params (HLO size is
+O(1) in depth — mandatory for the 80/94-layer archs), with configurable
+rematerialization.  The same block is reused by moe.py (which swaps the MLP)
+and whisper.py (which adds cross-attention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import kvcache, layers
+from .config import ArchConfig
+from .layers import cast
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def init_dense_layer(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": layers.init_norm(cfg.norm, cfg.d_model),
+        "attn": layers.init_attention(ks[0], cfg),
+        "mlp_norm": layers.init_norm(cfg.norm, cfg.d_model),
+        "mlp": layers.init_mlp(ks[1], cfg),
+    }
+
+
+def dense_layer_fwd(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray) -> jnp.ndarray:
+    rs = jnp.asarray(cfg.residual_scale, x.dtype)
+    h = layers.apply_norm(cfg.norm, p["attn_norm"], x)
+    h = layers.attention_block(p["attn"], cfg, h, positions,
+                               window=cfg.sliding_window)
+    x = x + h * rs
+    x = constrain(x, "activation")
+    h = layers.apply_norm(cfg.norm, p["mlp_norm"], x)
+    h = layers.apply_mlp(p["mlp"], cfg, h)
+    x = x + h * rs
+    return constrain(x, "activation")
+
+
+def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                       layer_cache: Dict, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """One-token (or short-S) step against a ring cache."""
+    rs = jnp.asarray(cfg.residual_scale, x.dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = layers.apply_norm(cfg.norm, p["attn_norm"], x)
+    q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
+    new_cache = kvcache.cache_update_layer(layer_cache, k, v, pos)
+    if S > layer_cache["k"].shape[1]:
+        # prefill-from-scratch longer than the (windowed) ring: the ring only
+        # keeps the trailing window, so attend the fresh full-sequence k/v.
+        o = layers.sdpa(q, k, v, causal=True, window=cfg.sliding_window,
+                        q_positions=positions, kv_positions=positions)
+    elif S == 1:
+        # steady-state decode: attend the PRE-update cache + an explicit
+        # new-token term; the updated ring is written but never re-read.
+        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache)
+        o = layers.sdpa_append(q, ck, cv, k, v, window=cfg.sliding_window,
+                               q_positions=positions, kv_positions=kv_pos,
+                               kv_valid=kv_valid)
+    else:
+        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache)
+        o = layers.sdpa(q, ck, cv, causal=True, window=cfg.sliding_window,
+                        q_positions=positions, kv_positions=kv_pos, kv_valid=kv_valid)
+    o = o.reshape(B, S, cfg.n_heads * cfg.the_head_dim())
+    h = jnp.einsum("bsq,qd->bsd", o, layers.wcast(p["attn"]["wo"], "row"))
+    x = x + h * rs
+    h = layers.apply_norm(cfg.norm, p["mlp_norm"], x)
+    h = layers.apply_mlp(p["mlp"], cfg, h)
+    x = x + h * rs
+    return x, new_cache
+
+
+class DenseLM:
+    """Functional model object; params are plain pytrees."""
+
+    family_layer_init = staticmethod(init_dense_layer)
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- init ------------------------------------------------------------------
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        k_emb, k_layers = jax.random.split(key)
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        stacked = jax.vmap(lambda k: self._init_layer(k))(layer_keys)
+        return {
+            "embedding": layers.init_embedding(k_emb, cfg),
+            "layers": stacked,
+            "final_norm": layers.init_norm(cfg.norm, cfg.d_model),
+        }
+
+    def _init_layer(self, key) -> Dict:
+        return init_dense_layer(key, self.cfg)
+
+    def _layer_fwd(self, p, x, positions):
+        return dense_layer_fwd(p, self.cfg, x, positions)
+
+    def _layer_decode(self, p, x, layer_cache, pos):
+        return dense_layer_decode(p, self.cfg, x, layer_cache, pos)
+
+    # -- stack runner ------------------------------------------------------------
+
+    def _run_stack(self, stacked: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                   aux_init: Any = None):
+        """Scan (or unroll) the layer stack.  Returns (x, aux)."""
+        cfg = self.cfg
+
+        def body(carry, p):
+            h, aux = carry
+            h2, aux2 = self._layer_fwd_aux(p, h, positions, aux)
+            return (h2, aux2), None
+
+        fn = remat_wrap(body, cfg.remat)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(fn, (x, aux_init), stacked)
+        else:
+            aux = aux_init
+            for i in range(cfg.n_layers):
+                p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+                (x, aux), _ = fn((x, aux), p)
+        return x, aux
+
+    def _layer_fwd_aux(self, p, x, positions, aux):
+        return self._layer_fwd(p, x, positions), aux
+
+    # -- public API ----------------------------------------------------------------
+
+    def apply(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        """Training/prefill forward over full sequences -> logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = layers.embed_tokens(params["embedding"], cfg, tokens)
+        x = constrain(x, "activation")
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _ = self._run_stack(params["layers"], x, positions)
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = layers.lm_head(params["embedding"], cfg, x)
+        return constrain(logits, "logits")
+
+    def loss_aux(self, params: Dict, batch: Dict):
+        """Hook: families may add auxiliary losses (MoE load balance)."""
+        return self.apply(params, batch), 0.0
+
+    # -- decode ------------------------------------------------------------------
+
+    def cache_len(self, seq_len: int) -> int:
+        w = self.cfg.sliding_window
+        return min(seq_len, w) if w else seq_len
+
+    def init_cache(self, B: int, seq_len: int) -> Dict:
+        cfg = self.cfg
+        return kvcache.init_attn_cache(
+            cfg.n_layers, B, self.cache_len(seq_len), cfg.n_kv_heads, cfg.the_head_dim()
+        )
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Dict]:
+        """tokens: (B, S_new) — one (or a few) new tokens per sequence."""
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embedding"], cfg, tokens)
+        pos = cache["length"]
+
+        def body(carry, layer_in):
+            h = carry
+            p, lc = layer_in
+            h, new_lc = self._layer_decode(p, h, lc, pos)
+            return h, new_lc
+
+        layer_caches = {k: cache[k] for k in ("k", "v", "positions")}
+        fn = remat_wrap(body, "none")
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(fn, x, (params["layers"], layer_caches))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                x, nc = fn(x, (p, lc))
+                outs.append(nc)
+            new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = layers.lm_head(params["embedding"], cfg, x)
+        new_cache = dict(new_caches)
+        new_cache["length"] = cache["length"] + tokens.shape[1]
+        return constrain(logits, "logits"), new_cache
+
+    def prefill(self, params: Dict, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """Full-sequence forward that also fills the cache (kind='prefill')."""
+        cache = self.init_cache(tokens.shape[0], tokens.shape[1])
+        logits, cache = self.decode_step(params, cache, tokens)
+        return logits, cache

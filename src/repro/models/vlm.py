@@ -1,0 +1,98 @@
+"""InternVL2-style VLM backbone (arXiv:2404.16821).
+
+The InternViT frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (B, n_patches, patch_dim).  A 2-layer
+MLP projector (as in InternVL) maps them into the InternLM2 backbone, where
+they are prepended to the token embeddings.  Decode shapes are pure-LM
+(the image context lives inside the KV cache), so ``decode_step`` is
+inherited from :class:`DenseLM` unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers
+from .config import ArchConfig
+from .layers import cast
+from .transformer import DenseLM
+
+
+class VisionLM(DenseLM):
+    def init(self, key) -> Dict:
+        k_base, k_proj = jax.random.split(key)
+        params = super().init(k_base)
+        pd = self.cfg.vlm.patch_dim or self.cfg.d_model
+        ks = jax.random.split(k_proj, 2)
+        params["patch_proj"] = {
+            "norm": layers.init_norm("layernorm", pd),
+            "w": layers.dense_init(ks[0], pd, self.cfg.d_model),
+            "w2": layers.dense_init(ks[1], self.cfg.d_model, self.cfg.d_model),
+        }
+        return params
+
+    def _project_patches(self, params: Dict, patches: jnp.ndarray) -> jnp.ndarray:
+        pp = params["patch_proj"]
+        x = layers.apply_norm("layernorm", pp["norm"], patches.astype(layers.COMPUTE_DTYPE))
+        x = jax.nn.gelu(jnp.einsum("bpd,dm->bpm", x, cast(pp["w"])))
+        return jnp.einsum("bpm,mn->bpn", x, cast(pp["w2"]))
+
+    def apply(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        tok_x = layers.embed_tokens(params["embedding"], cfg, tokens)
+        if "patch_embeds" in batch:
+            img_x = self._project_patches(params, batch["patch_embeds"])
+            x = jnp.concatenate([img_x, tok_x], axis=1)
+        else:
+            x = tok_x
+        x = constrain(x, "activation")
+        total = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32)[None], (B, total))
+        x, _ = self._run_stack(params["layers"], x, positions)
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        x = x[:, -S:]  # logits only over the text positions
+        return constrain(layers.lm_head(params["embedding"], cfg, x), "logits")
+
+    def prefill(self, params: Dict, tokens: jnp.ndarray,
+                patch_embeds=None) -> Tuple[jnp.ndarray, Dict]:
+        if patch_embeds is None:
+            return super().prefill(params, tokens)
+        img_x = self._project_patches(params, patch_embeds)
+        B, n_p = img_x.shape[0], img_x.shape[1]
+        cache = self.init_cache(B, n_p + tokens.shape[1])
+        # run image prefix through the stack to fill the cache, then the text
+        _, cache = self._decode_embedded(params, cache, img_x)
+        return self.decode_step(params, cache, tokens)
+
+    def _decode_embedded(self, params, cache, x_embed):
+        """decode_step but starting from embeddings instead of token ids."""
+        cfg = self.cfg
+        pos = cache["length"]
+
+        def body(carry, layer_in):
+            h = carry
+            p, lc = layer_in
+            h, new_lc = self._layer_decode(p, h, lc, pos)
+            return h, new_lc
+
+        layer_caches = {k: cache[k] for k in ("k", "v", "positions")}
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(body, x_embed, (params["layers"], layer_caches))
+        else:
+            outs = []
+            x = x_embed
+            for i in range(cfg.n_layers):
+                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                x, nc = body(x, (p, lc))
+                outs.append(nc)
+            new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache = dict(new_caches)
+        new_cache["length"] = cache["length"] + x_embed.shape[1]
+        return x, new_cache

@@ -1,0 +1,4 @@
+from .engine import make_decode_step, make_prefill
+from .sampling import greedy, temperature_sample
+
+__all__ = ["make_decode_step", "make_prefill", "greedy", "temperature_sample"]

@@ -1,0 +1,43 @@
+"""Serving steps: prefill + single-token decode against a KV/state cache.
+
+``make_decode_step`` is what the decode_* / long_* dry-run cells lower: one
+new token per sequence with a cache of ``seq_len`` (per the assignment, these
+cells lower ``serve_step``, not ``train_step``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_decode_step(model) -> Callable:
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(params, cache, tokens)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, logits, new_cache
+
+    return serve_step
+
+
+def make_prefill(model) -> Callable:
+    def prefill(params, tokens, *extra):
+        logits, cache = model.prefill(params, tokens, *extra)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return prefill
+
+
+def generate(model, params, prompt: jnp.ndarray, max_new: int, *extra) -> jnp.ndarray:
+    """Greedy autoregressive generation (examples / integration tests)."""
+    prefill = jax.jit(make_prefill(model))
+    step = jax.jit(make_decode_step(model))
+    tok, cache = prefill(params, prompt, *extra)
+    out = [tok]
+    for _ in range(max_new - 1):
+        tok, _, cache = step(params, cache, tok[:, None])
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,19 @@
+"""Token sampling utilities."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits: jnp.ndarray, temperature: float = 1.0,
+                       top_k: int = 0) -> jnp.ndarray:
+    lg = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,110 @@
+"""AdamW + LR schedules (hand-rolled: optax is not a dependency).
+
+Includes the WSD (warmup-stable-decay) schedule from MiniCPM
+(arXiv:2404.06395), selected by the minicpm-2b config, alongside the standard
+cosine schedule.  Optimizer state mirrors the parameter sharding (each moment
+tensor inherits its parameter's NamedSharding under pjit) — ZeRO comes for
+free from the 2-D param sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_frac: float = 0.9        # wsd: fraction of post-warmup steps at peak
+    min_ratio: float = 0.1
+
+
+def wsd_schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    """Warmup-Stable-Decay: linear warmup, long flat stage, short decay tail."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    stable_end = cfg.warmup_steps + cfg.stable_frac * (cfg.total_steps - cfg.warmup_steps)
+    decay_len = jnp.maximum(cfg.total_steps - stable_end, 1.0)
+    decay = 1.0 - (1.0 - cfg.min_ratio) * jnp.clip((step - stable_end) / decay_len, 0.0, 1.0)
+    return warm * jnp.where(step <= stable_end, 1.0, decay)
+
+
+def cosine_schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def lr_at_step(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    if cfg.schedule == "wsd":
+        mult = wsd_schedule(step, cfg)
+    elif cfg.schedule == "constant":
+        mult = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    else:
+        mult = cosine_schedule(step, cfg)
+    return cfg.lr * mult
+
+
+def adamw_init(params: Any) -> Dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    sq = jax.tree_util.tree_map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def _is_matrix(p: jnp.ndarray) -> bool:
+    # weight decay only on weight matrices (>=2 trailing dims), not norms/bias
+    return p.ndim >= 2
+
+
+def adamw_update(grads: Any, opt_state: Dict, params: Any, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict, Dict[str, jnp.ndarray]]:
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9)) if cfg.grad_clip else 1.0
+    lr = lr_at_step(step.astype(jnp.float32), cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / bc1
+        nu_hat = nu / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

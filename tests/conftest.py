@@ -1,0 +1,63 @@
+"""Shared test helpers.
+
+NOTE: XLA device-count flags are deliberately NOT set here — smoke tests and
+benches must see the single real CPU device; only ``launch/dryrun.py`` forces
+512 placeholder devices (and it does so before importing jax).
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import Any, Dict, Generator, List, Optional, Tuple
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.core import FaaSKeeperService, FaultPlan, SimCloud  # noqa: E402
+from repro.core import znode  # noqa: E402
+
+
+def make_service(seed: int = 0, faults: Optional[FaultPlan] = None, regions=("region-0",),
+                 **kwargs) -> Tuple[SimCloud, FaaSKeeperService]:
+    cloud = SimCloud(seed=seed, faults=faults)
+    svc = FaaSKeeperService(cloud, regions=regions, **kwargs)
+    return cloud, svc
+
+
+class Observations:
+    """Per-client logs collected by workload drivers for invariant checks."""
+
+    def __init__(self):
+        self.acks: Dict[str, List[Dict[str, Any]]] = {}     # session -> acked writes
+        self.reads: Dict[str, List[Dict[str, Any]]] = {}    # session -> read completions
+        self.watch_deliveries: Dict[str, List[Dict[str, Any]]] = {}
+        self.watch_registrations: Dict[str, List[Dict[str, Any]]] = {}
+        self.errors: Dict[str, List[Dict[str, Any]]] = {}
+
+    def log(self, kind: str, session: str, **fields) -> None:
+        getattr(self, kind).setdefault(session, []).append(fields)
+
+
+def replay_history(acked_ops: List[Dict[str, Any]]) -> Dict[str, List[Dict[str, Any]]]:
+    """Replay acked writes in txid order; returns per-path state history."""
+    tree: Dict[str, Dict[str, Any]] = {"/": znode.fresh_node("/")}
+    tree["/"]["exists"] = True
+    history: Dict[str, List[Dict[str, Any]]] = {"/": [dict(tree["/"])]}
+    for op in sorted(acked_ops, key=lambda o: o["txid"]):
+        path = op["path"]
+        parent = znode.parent_path(path)
+        node_pre = tree.get(path)
+        parent_pre = tree.get(parent) if op["op"] in ("create", "delete") and path != "/" else None
+        node_post, parent_post = znode.materialize(
+            op["op"], dict(op["args"], path=path), node_pre, parent_pre, op["txid"]
+        )
+        tree[path] = node_post
+        history.setdefault(path, []).append(dict(node_post))
+        if parent_post is not None:
+            tree[parent] = parent_post
+            history.setdefault(parent, []).append(dict(parent_post))
+    return {"tree": tree, "history": history}

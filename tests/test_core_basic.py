@@ -1,0 +1,205 @@
+"""Client-visible ZooKeeper semantics (paper §4.1, §4.6)."""
+
+import pytest
+
+from conftest import make_service
+from repro.core import (
+    BadVersionError,
+    NodeExistsError,
+    NoNodeError,
+    NotEmptyError,
+)
+
+
+def test_create_and_read():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    assert c.create("/a", b"x") == "/a"
+    data, stat = c.get_data("/a")
+    assert data == b"x"
+    assert stat.version == 0
+    assert stat.modified_txid >= 1
+
+
+def test_read_your_write_after_ack():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/a", b"1")
+    for i in range(5):
+        c.set_data("/a", str(i).encode())
+        data, stat = c.get_data("/a")
+        assert data == str(i).encode()
+        assert stat.version == i + 1
+
+
+def test_create_existing_fails():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/a", b"")
+    with pytest.raises(NodeExistsError):
+        c.create("/a", b"")
+
+
+def test_missing_node_errors():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    with pytest.raises(NoNodeError):
+        c.get_data("/nope")
+    with pytest.raises(NoNodeError):
+        c.set_data("/nope", b"")
+    with pytest.raises(NoNodeError):
+        c.delete("/nope")
+    with pytest.raises(NoNodeError):
+        c.create("/no/parent", b"")
+
+
+def test_conditional_version_semantics():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/a", b"")
+    assert c.set_data("/a", b"1", version=0) == 1
+    with pytest.raises(BadVersionError):
+        c.set_data("/a", b"2", version=0)
+    assert c.set_data("/a", b"2", version=1) == 2
+    with pytest.raises(BadVersionError):
+        c.delete("/a", version=0)
+    c.delete("/a", version=2)
+    assert c.exists("/a") is None
+
+
+def test_delete_nonempty_fails():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/a", b"")
+    c.create("/a/b", b"")
+    with pytest.raises(NotEmptyError):
+        c.delete("/a")
+    c.delete("/a/b")
+    c.delete("/a")
+
+
+def test_children_and_cversion():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/a", b"")
+    c.create("/a/x", b"")
+    c.create("/a/y", b"")
+    children, stat = c.get_children("/a")
+    assert children == ["x", "y"]
+    assert stat.cversion == 2
+    c.delete("/a/x")
+    children, stat = c.get_children("/a")
+    assert children == ["y"]
+    assert stat.cversion == 3
+
+
+def test_sequential_nodes_monotone():
+    cloud, svc = make_service()
+    c1 = svc.connect_sync("s1")
+    c2 = svc.connect_sync("s2")
+    c1.create("/q", b"")
+    paths = [
+        c1.create("/q/n-", b"", sequence=True),
+        c2.create("/q/n-", b"", sequence=True),
+        c1.create("/q/n-", b"", sequence=True),
+    ]
+    suffixes = [int(p.rsplit("-", 1)[1]) for p in paths]
+    assert suffixes == sorted(suffixes)
+    assert len(set(suffixes)) == 3
+
+
+def test_ephemeral_no_children():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/e", b"", ephemeral=True)
+    from repro.core import FKError
+
+    with pytest.raises(FKError):
+        c.create("/e/child", b"")
+
+
+def test_watch_data_change():
+    cloud, svc = make_service()
+    c1 = svc.connect_sync("s1")
+    c2 = svc.connect_sync("s2")
+    c1.create("/w", b"0")
+    c2.get_data("/w", watch=True)
+    c1.set_data("/w", b"1")
+    ev = c2.wait_watch("/w")
+    assert ev["event"] == "changed"
+    # one-shot: a second update does not re-notify
+    n_events = len([e for e in c2.client.inbox.events if e.get("kind") == "watch"])
+    c1.set_data("/w", b"2")
+    cloud.run()
+    assert len([e for e in c2.client.inbox.events if e.get("kind") == "watch"]) == n_events
+
+
+def test_watch_children_and_delete():
+    cloud, svc = make_service()
+    c1 = svc.connect_sync("s1")
+    c2 = svc.connect_sync("s2")
+    c1.create("/p", b"")
+    c2.get_children("/p", watch=True)
+    c1.create("/p/kid", b"")
+    ev = c2.wait_watch("/p")
+    assert ev["event"] == "child"
+    c2.get_data("/p/kid", watch=True)
+    c1.delete("/p/kid")
+    ev = c2.wait_watch("/p/kid")
+    assert ev["event"] == "deleted"
+
+
+def test_exists_watch_on_creation():
+    cloud, svc = make_service()
+    c1 = svc.connect_sync("s1")
+    c2 = svc.connect_sync("s2")
+    assert c2.exists("/soon", watch=True) is None
+    c1.create("/soon", b"")
+    ev = c2.wait_watch("/soon")
+    assert ev["event"] == "created"
+
+
+def test_multi_region_replication():
+    cloud, svc = make_service(regions=("us-east", "eu-west"))
+    c_us = svc.connect_sync("s1", region="us-east")
+    c_eu = svc.connect_sync("s2", region="eu-west")
+    c_us.create("/g", b"payload")
+    data, _ = c_eu.get_data("/g")
+    assert data == b"payload"
+    c_eu.set_data("/g", b"v2")
+    data, _ = c_us.get_data("/g")
+    assert data == b"v2"
+
+
+def test_session_close_removes_ephemerals():
+    cloud, svc = make_service()
+    c1 = svc.connect_sync("s1")
+    c2 = svc.connect_sync("s2")
+    c1.create("/tmp1", b"", ephemeral=True)
+    c1.create("/perm", b"")
+    c1.close()
+    cloud.run()
+    assert c2.exists("/tmp1") is None
+    assert c2.exists("/perm") is not None
+
+
+def test_pipelined_writes_fifo():
+    cloud, svc = make_service()
+    c = svc.connect_sync("s1")
+    c.create("/pipe", b"")
+
+    def script(client):
+        rids = []
+        for i in range(8):
+            rid = yield from client.submit_set_data("/pipe", str(i).encode())
+            rids.append(rid)
+        txids = []
+        for rid in rids:
+            res = yield from client.wait_result(rid)
+            txids.append(res["txid"])
+        return txids
+
+    txids = cloud.run_task(script(c.client))
+    assert txids == sorted(txids), "session FIFO order violated"
+    data, _ = c.get_data("/pipe")
+    assert data == b"7"

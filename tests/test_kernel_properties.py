@@ -1,0 +1,71 @@
+"""Hypothesis property sweeps over the Pallas kernels: random shapes/blocks
+must always match the oracles (interpret mode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, assume, given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, reference_attention
+from repro.kernels.rglru_scan import reference_rglru, rglru_scan
+from repro.kernels.ssd_scan import reference_ssd, ssd_scan
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(S=st.integers(2, 40), T=st.integers(2, 40),
+       Hkv=st.sampled_from([1, 2, 4]), G=st.sampled_from([1, 2, 3]),
+       D=st.sampled_from([8, 16]), bq=st.sampled_from([8, 16]),
+       window=st.sampled_from([None, 4, 16]), seed=st.integers(0, 99))
+def test_flash_attention_property(S, T, Hkv, G, D, bq, window, seed):
+    # exclude query rows with zero valid keys (q past the kv horizon with a
+    # window): attention is undefined there — the kernel returns zeros, the
+    # dense oracle a uniform average over the masked row.
+    assume(window is None or T >= S)
+    H = Hkv * G
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (1, T, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (1, T, Hkv, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=bq, bk=bq)
+    qf = q.transpose(0, 2, 1, 3).reshape(H, S, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, 1).reshape(H, T, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, 1).reshape(H, T, D)
+    ref = reference_attention(qf, kf, vf, causal=True, window=window)
+    ref = ref.reshape(1, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-4, rtol=3e-4)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(L=st.integers(2, 48), H=st.sampled_from([2, 4, 6]),
+       P=st.sampled_from([4, 8]), N=st.sampled_from([8, 16]),
+       chunk=st.sampled_from([4, 8, 16]), seed=st.integers(0, 99))
+def test_ssd_scan_property(L, H, P, N, chunk, seed):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (1, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, L, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (1, L, N)) * 0.5
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, bh=2)
+    yr = reference_ssd(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(L=st.integers(2, 64), W=st.sampled_from([8, 16, 24]),
+       bq=st.sampled_from([8, 16]), seed=st.integers(0, 99))
+def test_rglru_scan_property(L, W, bq, seed):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (1, L, W))) * 0.98 + 0.01
+    b = jax.random.normal(ks[1], (1, L, W))
+    h = rglru_scan(a, b, block_q=bq, block_w=8)
+    hr = reference_rglru(a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-3, rtol=1e-3)
