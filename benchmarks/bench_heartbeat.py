@@ -7,7 +7,7 @@ daily cost at 1-per-minute scheduling — the "fraction of VM price" claim.
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 from .common import ms, save_artifact, table
 from repro.core.cost import VM_DAILY, f as fn_cost

@@ -10,12 +10,11 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from .common import ms, pct_row, save_artifact, table
+from .common import pct_row, save_artifact, table
 
 from repro.core import SimCloud
 from repro.core.primitives import Primitives
 from repro.core.storage import KVStore
-from repro.core.simcloud import Sleep
 
 
 def _bench_latency(n: int = 1000) -> List[Dict]:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from .common import ms, pct_row, save_artifact, table
+from .common import pct_row, save_artifact, table
 
 from repro.core import FifoQueue, SimCloud
 from repro.core.functions import FunctionRuntime

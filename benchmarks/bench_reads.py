@@ -9,9 +9,9 @@ per-4kB units).
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
-from .common import ms, pct_row, save_artifact, table
+from .common import ms, save_artifact, table
 from repro.core import SimCloud, ZooKeeperModel
 from repro.core.cost import R_S3, r_dd
 from repro.core.storage import KVStore, ObjectStore
@@ -62,7 +62,6 @@ def run(n: int = 100) -> Dict:
     print(table("Fig 8 — read latency and cost vs node size", rows,
                 ["size_kB", "s3_p50_ms", "ddb_p50_ms", "zk_p50_ms",
                  "s3_usd_per_M", "ddb_usd_per_M"]))
-    crossover = next((r for r in rows if r["ddb_usd_per_M"] > r["s3_usd_per_M"]), None)
     ratio128 = next(r for r in rows if r["size_kB"] == 128)
     print(f"\n128 kB read cost ratio DDB/S3: "
           f"{ratio128['ddb_usd_per_M']/ratio128['s3_usd_per_M']:.0f}x (paper: 20x)")

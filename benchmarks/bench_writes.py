@@ -8,9 +8,9 @@ percentiles the paper uses to locate the bottleneck (queue push + S3 update).
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
-from .common import ms, pct_row, save_artifact, table
+from .common import pct_row, save_artifact, table
 from repro.core import SimCloud, ZooKeeperModel
 from tests.conftest import make_service  # reuse the wired service factory
 

@@ -40,8 +40,7 @@ from .common import save_artifact, table
 
 from repro import configs
 from repro.launch import hlo_analysis
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-from repro.models.config import SHAPES_BY_NAME, EncDecConfig
+from repro.models.config import SHAPES_BY_NAME
 
 
 def _analysis_depths(cfg) -> Tuple[int, int]:

@@ -1,43 +1,74 @@
 """Benchmark aggregator: one section per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline] [--smoke]
 
 Artifacts land in benchmarks/out/*.json; EXPERIMENTS.md cites them.
+
+``--smoke`` is the CI configuration: the sample-count-heavy sections (reads,
+writes) run reduced, the (slow, compile-heavy) roofline is skipped,
+and a consolidated ``benchmarks/out/BENCH_smoke.json`` summary is written —
+one record per section with wall time and the section payload — seeding the
+per-commit perf trajectory that CI uploads as an artifact.
 """
 
 from __future__ import annotations
 
+import platform
 import sys
 import time
 
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv
     t0 = time.time()
     sections = []
 
     from . import (bench_cost, bench_heartbeat, bench_primitives, bench_queues,
                    bench_reads, bench_writes)
 
-    for name, mod in [("primitives (Table 6a / Fig 6b)", bench_primitives),
-                      ("queues (Table 7a / Fig 7b)", bench_queues),
-                      ("reads (Fig 8)", bench_reads),
-                      ("writes (Fig 9/10, Table 3)", bench_writes),
-                      ("heartbeat (Fig 11)", bench_heartbeat),
-                      ("cost model (Table 4 / Fig 12 / §6)", bench_cost)]:
-        print(f"\n{'='*72}\n=== {name}\n{'='*72}")
-        mod.run()
-        sections.append(name)
+    def reads():
+        return bench_reads.run(n=20 if smoke else 100)
 
-    if "--skip-roofline" not in sys.argv:
+    def writes():
+        return bench_writes.run(n=12 if smoke else 60)
+
+    for name, runner in [("primitives (Table 6a / Fig 6b)", bench_primitives.run),
+                         ("queues (Table 7a / Fig 7b)", bench_queues.run),
+                         ("reads (Fig 8)", reads),
+                         ("writes (Fig 9/10, Table 3)", writes),
+                         ("heartbeat (Fig 11)", bench_heartbeat.run),
+                         ("cost model (Table 4 / Fig 12 / §6)", bench_cost.run)]:
+        print(f"\n{'='*72}\n=== {name}\n{'='*72}")
+        t_sec = time.time()
+        payload = runner()
+        sections.append({"section": name, "wall_s": round(time.time() - t_sec, 2),
+                         "payload": payload})
+
+    if not smoke and "--skip-roofline" not in sys.argv:
         print(f"\n{'='*72}\n=== roofline (dry-run derived; full table in "
               f"EXPERIMENTS.md)\n{'='*72}")
         from . import roofline
 
-        roofline.run(quick=True)
-        sections.append("roofline")
+        t_sec = time.time()
+        payload = roofline.run(quick=True)
+        sections.append({"section": "roofline", "wall_s": round(time.time() - t_sec, 2),
+                         "payload": payload})
 
-    print(f"\nall {len(sections)} benchmark sections completed "
-          f"in {time.time()-t0:.1f}s")
+    total_s = round(time.time() - t0, 1)
+    if smoke:
+        from .common import save_artifact
+
+        summary = {
+            "mode": "smoke",
+            "total_wall_s": total_s,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "sections": sections,
+        }
+        path = save_artifact("BENCH_smoke", summary)
+        print(f"\nwrote {path}")
+
+    print(f"\nall {len(sections)} benchmark sections completed in {total_s}s")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,8 @@ def compile_for(n_workers: int):
     recompilation flow are what the example demonstrates)."""
     devices = jax.devices()[:1]
     mesh = Mesh(devices, ("data",))
-    x = jnp.ones((max(1, n_workers) * 4, 64))
+    x = jax.device_put(jnp.ones((max(1, n_workers) * 4, 64)),
+                       NamedSharding(mesh, P("data")))
 
     @jax.jit
     def step(x):

@@ -12,7 +12,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import FaaSKeeperService, NoNodeError, SimCloud
+from repro.core import FaaSKeeperService, SimCloud
 
 
 def main() -> None:
@@ -40,8 +40,8 @@ def main() -> None:
 
     # -- sequential + ephemeral nodes (leader election building blocks) -----------
     alice.create("/election", b"")
-    n1 = alice.create("/election/cand-", b"", ephemeral=True, sequence=True)
-    n2 = bob.create("/election/cand-", b"", ephemeral=True, sequence=True)
+    alice.create("/election/cand-", b"", ephemeral=True, sequence=True)
+    bob.create("/election/cand-", b"", ephemeral=True, sequence=True)
     children, _ = alice.get_children("/election")
     leader = sorted(children)[0]
     print(f"candidates {children} -> leader {leader}")

@@ -25,7 +25,7 @@ from repro.coord import CoordinatedManifest, MembershipService, StragglerDetecto
 from repro.core import FaaSKeeperService, SimCloud
 from repro.data import DataConfig, SyntheticPipeline
 from repro.models import build_model
-from repro.models.config import ArchConfig, ShapeSpec
+from repro.models.config import ShapeSpec
 from repro.train import AdamWConfig, make_train_step
 from repro.train.step import TrainStepConfig, init_train_state
 
@@ -83,8 +83,17 @@ def main() -> None:
                 cloud.run()
                 print(f"[coord] heartbeat evicted it; members: {membership.members()}")
                 # --- recovery: rejoin, restore from last committed manifest ---
-                worker2 = membership.join("worker-0b")
-                restored, at = store.restore({"params": params, "opt": state})
+                membership.join("worker-0b")
+                try:
+                    restored, at = store.restore({"params": params, "opt": state})
+                except FileNotFoundError:
+                    # crashed before the first checkpoint committed: start over
+                    print("[coord] no committed checkpoint; restarting from 0\n")
+                    params = model.init(jax.random.key(0))
+                    state = init_train_state(model, params, step_cfg)
+                    losses.clear()
+                    step = 0
+                    continue
                 params, state = restored["params"], restored["opt"]
                 step = at
                 print(f"[coord] recovered at committed step {at} "

@@ -15,7 +15,7 @@ from __future__ import annotations
 import json
 from typing import Dict, Optional
 
-from ..core import FaaSKeeperService, NodeExistsError, NoNodeError
+from ..core import FaaSKeeperService, NodeExistsError
 
 CKPT_DIR = "/ckpt"
 LATEST = "/ckpt/latest"

@@ -11,8 +11,8 @@ ZooKeeper-grade consistency, from serverless parts only.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List
 
 from ..core import FaaSKeeperService, NoNodeError, NodeExistsError
 

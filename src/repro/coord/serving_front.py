@@ -11,10 +11,9 @@ serverless building blocks, not ZooKeeper-specific.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Generator, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Generator, List
 
-import numpy as np
 
 from ..core import FifoQueue, SimCloud
 from ..core.functions import FunctionRuntime

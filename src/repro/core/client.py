@@ -14,11 +14,9 @@ synchronous use (examples, coord/ layer).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List, Optional
 
-from . import znode
 from .sessions import Inbox, SessionState
-from .simcloud import Sleep
 from .znode import (
     BadVersionError,
     FKError,

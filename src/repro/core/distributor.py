@@ -31,7 +31,7 @@ from typing import Any, Dict, Generator, List, Optional, Tuple
 from . import znode
 from .primitives import Primitives
 from .queues import Message
-from .simcloud import ConditionFailed, Sleep, Task, Wait
+from .simcloud import Task, Wait
 from .storage import KVStore, ObjectStore
 from .watches import WatchRegistry, triggered_watches
 from .writer import STATE, commit_unlock

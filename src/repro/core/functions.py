@@ -15,7 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Generator, List, Optional
 
-from .simcloud import SimCloud, SimulatedCrash, Sleep, Wait
+from .simcloud import SimCloud, SimulatedCrash, Sleep
 
 LAMBDA_GBS_PRICE = 1.66667e-5  # USD per GB-second (AWS Lambda, us-east-1)
 LAMBDA_INVOKE_PRICE = 2.0e-7  # USD per invocation

@@ -13,7 +13,7 @@ the DynamoDB scan plus GB-seconds of function time (reproduced in
 
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, List
+from typing import Generator, List
 
 from .simcloud import Sleep, Task, Wait
 

@@ -16,7 +16,7 @@ store's per-item atomic updates.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List
 
 from .simcloud import ConditionFailed
 from .storage import KVStore

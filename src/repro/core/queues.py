@@ -15,10 +15,10 @@ the failure model FaaSKeeper's idempotent distributor relies on (§4.3).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Generator, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Generator, List, Optional
 
-from .simcloud import SimCloud, Sleep, SimulatedCrash, Wait
+from .simcloud import SimCloud, Sleep, Wait
 
 
 @dataclass

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Generator, List, Optional, Set, Tuple
 
-from .simcloud import Future, SimCloud, Sleep, Wait
+from .simcloud import Future, SimCloud, Wait
 
 
 class Inbox:

@@ -88,7 +88,6 @@ class LatencyModel:
 
     def p(self, q: float, size_kb: float = 0.0) -> float:
         """Analytic quantile (for cost/latency reporting without sampling)."""
-        from math import erf, sqrt  # noqa: F401  (inverse below)
 
         # inverse CDF of standard normal via numpy
         z = float(np.sqrt(2.0) * _erfinv(2.0 * q - 1.0))

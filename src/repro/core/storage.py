@@ -14,7 +14,7 @@ is the faithful concurrency model of Lambdas against DynamoDB.
 from __future__ import annotations
 
 import copy
-from typing import Any, Callable, Dict, Generator, Optional, Tuple
+from typing import Any, Callable, Dict, Generator, Optional
 
 from .simcloud import ConditionFailed, SimCloud, Sleep
 

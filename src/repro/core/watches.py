@@ -12,7 +12,7 @@ append/remove idempotent under at-least-once retries.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List, Tuple
 
 from .primitives import Primitives
 from .storage import KVStore

@@ -20,7 +20,7 @@ TryCommit (Alg. 2 step 2) completes or rejects half-done requests.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List, Optional
 
 from . import znode
 from .primitives import Lock, Primitives

@@ -20,7 +20,7 @@ distributor's TryCommit so both apply byte-identical state transitions.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 
 class FKError(Exception):

@@ -13,7 +13,7 @@ same simulated network, exactly like the paper's Figures 8, 9 and 12.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List
 
 from .simcloud import SimCloud, Sleep
 from .znode import NoNodeError

@@ -1,0 +1,69 @@
+"""Version shims for the pinned jax (0.4.x) so the sharding layer and its
+call sites can be written against the current public API.
+
+Two gaps matter here:
+
+* ``AbstractMesh``: the modern constructor is ``AbstractMesh(axis_sizes,
+  axis_names)``; 0.4.x only accepts ``AbstractMesh(shape_tuple)`` with
+  ``((name, size), ...)`` pairs.  Rule resolution (and the sharding tests)
+  build abstract meshes with the modern signature, so we install a subclass
+  that accepts both.
+* ``jax.shard_map``: promoted out of ``jax.experimental`` (and its
+  ``check_rep`` flag renamed to ``check_vma``) after 0.4.x.  The MoE expert-
+  parallel paths call ``jax.shard_map(..., check_vma=False)``.
+
+Each shim is installed only when the running jax lacks the modern API, so an
+interpreter upgrade makes this module a no-op.  ``install()`` is idempotent
+and runs on ``import repro.dist``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.sharding
+
+
+def _install_abstract_mesh() -> None:
+    native = jax.sharding.AbstractMesh
+    try:  # modern signature already supported -> nothing to do
+        native((1,), ("_probe",))
+        return
+    except TypeError:
+        pass
+
+    class AbstractMesh(native):  # type: ignore[misc,valid-type]
+        """0.4.x AbstractMesh accepting the modern (sizes, names) call."""
+
+        def __init__(self, *args, **kwargs):
+            if (
+                len(args) >= 2
+                and isinstance(args[1], (tuple, list))
+                and all(isinstance(n, str) for n in args[1])
+            ):
+                sizes, names = args[0], args[1]
+                super().__init__(tuple(zip(names, sizes)), *args[2:], **kwargs)
+            else:
+                super().__init__(*args, **kwargs)
+
+    AbstractMesh.__name__ = "AbstractMesh"
+    AbstractMesh.__qualname__ = "AbstractMesh"
+    jax.sharding.AbstractMesh = AbstractMesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        kwargs.setdefault("check_rep", check_vma)
+        return _legacy_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def install() -> None:
+    _install_abstract_mesh()
+    _install_shard_map()

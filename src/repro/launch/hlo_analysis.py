@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

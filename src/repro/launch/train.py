@@ -13,14 +13,11 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import os
 import time
 from typing import Optional
 
 import jax
-import numpy as np
 
 from .. import configs
 from ..checkpoint import CheckpointStore
@@ -99,6 +96,13 @@ def run_training(arch: str, steps: int = 50, *, smoke: bool = True,
     t0 = time.time()
     for step in range(start_step, steps):
         if simulate_failure is not None and step == simulate_failure and not resume:
+            if store is not None:
+                # drain in-flight async saves before injecting the fault: their
+                # device->host copy already happened at save_async time, so any
+                # checkpoint started >=1 step ago counts as durably committed —
+                # and the background committer must not race the control-plane
+                # eviction below
+                store.wait()
             print(f"[fault] simulating worker crash at step {step} "
                   f"(restart with --resume to recover)")
             membership.fail(worker)

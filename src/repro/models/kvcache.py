@@ -11,9 +11,8 @@ sliding-window caches the same code path.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from .layers import COMPUTE_DTYPE

@@ -12,7 +12,7 @@ Decode keeps an O(1) recurrent state — this is why mamba2 runs the
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ shard_map.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,7 @@ from ..dist import sharding as shd
 from . import layers
 from .config import ArchConfig
 from .layers import cast
-from .transformer import DenseLM, remat_wrap
+from .transformer import DenseLM
 
 
 # ---------------------------------------------------------------------------
@@ -70,7 +70,6 @@ def _dispatch_ffn(xf: jnp.ndarray, w_flat: jnp.ndarray, e_flat: jnp.ndarray,
     # single gather->scatter dispatch.  (A per-slot k-loop variant was tried
     # in §Perf cell-2 iteration 3 and REFUTED: each of the k scatters
     # rewrites the whole (E_local*cap, D) buffer, +10% bytes accessed.)
-    slot_k = slot.reshape(T, k)
     tok_idx = jnp.arange(TK, dtype=jnp.int32) // k
     buf = jnp.zeros((E_local * capacity + 1, D), xf.dtype)
     buf = buf.at[slot].add(xf[tok_idx])
@@ -142,7 +141,6 @@ def _moe_decode_stationary(xf, w_flat, e_flat, p, cfg, mesh, rules, cap):
         return jax.lax.psum(picked.reshape(T, k, D_full).sum(1), rules.model)
 
     P_ = P
-    dp = rules.dp if len(rules.dp) == 1 else rules.dp
     return jax.shard_map(
         body, mesh=mesh,
         in_specs=(P_(), P_(), P_(),
@@ -231,7 +229,6 @@ def _capacity(tokens: int, m) -> int:
 def init_moe_layer(key, cfg: ArchConfig) -> Dict:
     m = cfg.moe
     ks = jax.random.split(key, 6)
-    n_mats = 3 if cfg.mlp == "swiglu" else 2
     ek = jax.random.split(ks[1], m.n_experts)
 
     def one_expert(k):

@@ -18,7 +18,7 @@ non-divisible tail unrolled — HLO stays O(1) in depth.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

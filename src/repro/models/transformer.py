@@ -9,8 +9,7 @@ and whisper.py (which adds cross-attention).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,6 @@ import jax.numpy as jnp
 from ..dist.sharding import constrain
 from . import kvcache, layers
 from .config import ArchConfig
-from .layers import cast
 
 
 def remat_wrap(fn, policy: str):

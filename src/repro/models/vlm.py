@@ -17,7 +17,6 @@ import jax.numpy as jnp
 
 from ..dist.sharding import constrain
 from . import layers
-from .config import ArchConfig
 from .layers import cast
 from .transformer import DenseLM
 

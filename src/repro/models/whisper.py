@@ -11,7 +11,7 @@ cross-attn k/v computed once from the encoder output.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ cells lower ``serve_step``, not ``train_step``).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ them):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import sys
 from pathlib import Path
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 if SRC not in sys.path:

@@ -22,6 +22,8 @@ from __future__ import annotations
 from typing import Dict, List
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property sweeps need hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import FaultPlan, NoNodeError, NodeExistsError, BadVersionError

@@ -4,13 +4,9 @@ crash/restart through the training driver."""
 
 from __future__ import annotations
 
-import json
-import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointStore
 from repro.coord import (CoordinatedManifest, MembershipService, ServingFrontend,

@@ -1,9 +1,7 @@
 """Synchronization primitives (paper §2.2 / §5.1) and queue semantics (§4.2)."""
 
-import pytest
 
-from conftest import make_service
-from repro.core import FaultPlan, FifoQueue, SimCloud
+from repro.core import FifoQueue, SimCloud
 from repro.core.primitives import Primitives
 from repro.core.storage import KVStore
 
@@ -75,7 +73,8 @@ def test_atomic_list_concurrent_append():
         yield from prim.list_append("l", [f"v{i}"])
         return True
 
-    tasks = [cloud.spawn(appender(i)) for i in range(20)]
+    for i in range(20):
+        cloud.spawn(appender(i))
     cloud.run()
     final = cloud.run_task(prim.list_get("l"))
     assert sorted(final) == sorted(f"v{i}" for i in range(20))

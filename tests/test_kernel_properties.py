@@ -6,6 +6,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property sweeps need hypothesis")
 from hypothesis import HealthCheck, assume, given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention, reference_attention

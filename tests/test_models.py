@@ -14,7 +14,6 @@ import pytest
 
 from repro import configs
 from repro.models import build_model
-from repro.models.config import ShapeSpec
 from repro.train import AdamWConfig, make_train_step
 from repro.train.step import TrainStepConfig, init_train_state
 

@@ -15,7 +15,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh
 
 from repro.dist import sharding as shd

@@ -42,7 +42,6 @@ def test_param_rules_cover_all_weights(arch):
     mesh = fake_mesh_16x16()
     sh = shd.param_shardings(p_abs, mesh)
     flat = jax.tree_util.tree_flatten_with_path(sh)[0]
-    leaves = dict(jax.tree_util.tree_flatten_with_path(p_abs)[0] and [])
     shapes = {tuple(k for k in path): leaf
               for path, leaf in jax.tree_util.tree_flatten_with_path(p_abs)[0]}
     replicated_big = []

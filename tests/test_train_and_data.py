@@ -3,7 +3,6 @@ int8 error-feedback compression, deterministic data pipeline."""
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +13,7 @@ from repro import configs
 from repro.data import DataConfig, SyntheticPipeline
 from repro.models import build_model
 from repro.models.config import ArchConfig, ShapeSpec
-from repro.train import AdamWConfig, adamw_init, adamw_update, lr_at_step
-from repro.train.optim import wsd_schedule
+from repro.train import AdamWConfig, lr_at_step
 from repro.train.step import (TrainStepConfig, cross_entropy, init_train_state,
                               make_train_step)
 
