@@ -24,7 +24,7 @@ def main() -> None:
     sections = []
 
     from . import (bench_cost, bench_heartbeat, bench_primitives, bench_queues,
-                   bench_reads, bench_writes)
+                   bench_reads, bench_serving, bench_writes)
 
     def reads():
         return bench_reads.run(n=20 if smoke else 100)
@@ -32,12 +32,16 @@ def main() -> None:
     def writes():
         return bench_writes.run(n=12 if smoke else 60)
 
+    def serving():
+        return bench_serving.run(n=16 if smoke else 32)
+
     for name, runner in [("primitives (Table 6a / Fig 6b)", bench_primitives.run),
                          ("queues (Table 7a / Fig 7b)", bench_queues.run),
                          ("reads (Fig 8)", reads),
                          ("writes (Fig 9/10, Table 3)", writes),
                          ("heartbeat (Fig 11)", bench_heartbeat.run),
-                         ("cost model (Table 4 / Fig 12 / §6)", bench_cost.run)]:
+                         ("cost model (Table 4 / Fig 12 / §6)", bench_cost.run),
+                         ("serving (continuous batching, §4.2/§6)", serving)]:
         print(f"\n{'='*72}\n=== {name}\n{'='*72}")
         t_sec = time.time()
         payload = runner()

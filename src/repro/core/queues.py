@@ -51,10 +51,15 @@ class FifoQueue:
         self._seq = itertools.count(1)
         self._pending: List[Message] = []
         self._consumer_active = False
+        self._inflight = 0  # leading _pending entries delivered to the consumer
         self.pushes = 0
         self.push_kb = 0.0
         self.deliveries = 0
         self.redeliveries = 0
+        self.claims = 0
+        self.requeues = 0
+        self.dropped = 0
+        self.dead_letters: List[Message] = []
 
     def set_handler(self, handler: Callable[[List[Message]], Generator]) -> None:
         self.handler = handler
@@ -76,8 +81,33 @@ class FifoQueue:
         msg = Message(next(self._seq), body, size_kb)
         self._pending.append(msg)
         self.pushes += 1
+        self.push_kb += max(size_kb, 0.064)
         self._maybe_trigger()
         return msg.seq
+
+    def claim_pending(self, max_n: int) -> List[Message]:
+        """Hand up to ``max_n`` not-yet-delivered messages to the running
+        consumer (long-poll receive inside an active invocation — the hook
+        continuous batching uses to refill free decode slots).
+
+        Claimed messages leave the queue, so a crash-redelivery of the
+        current batch does not include them; the claimer must :meth:`requeue`
+        any it did not finish.
+        """
+        if max_n <= 0:
+            return []
+        take = self._pending[self._inflight : self._inflight + max_n]
+        del self._pending[self._inflight : self._inflight + max_n]
+        self.claims += len(take)
+        return take
+
+    def requeue(self, msgs: List[Message]) -> None:
+        """Return claimed-but-unfinished messages to the head of the queue
+        (behind the in-flight batch), preserving FIFO order."""
+        if not msgs:
+            return
+        self._pending[self._inflight : self._inflight] = list(msgs)
+        self.requeues += len(msgs)
 
     # -- consumer side ------------------------------------------------------------
 
@@ -91,6 +121,7 @@ class FifoQueue:
     def _consume(self) -> Generator:
         while self._pending:
             batch = self._pending[: self.batch_size]
+            self._inflight = len(batch)
             attempts = 0
             while True:
                 self.deliveries += 1
@@ -101,12 +132,16 @@ class FifoQueue:
                 if task.error is None:
                     break
                 attempts += 1
-                self.redeliveries += 1
                 if attempts > self.max_retries:
-                    # poison batch: drop after max retries (DLQ semantics)
+                    # poison batch: route to the dead-letter list after max
+                    # retries so DLQ semantics are observable, not silent
+                    self.dropped += len(batch)
+                    self.dead_letters.extend(batch)
                     break
+                self.redeliveries += 1
                 yield Sleep(self.retry_backoff * attempts)
             del self._pending[: len(batch)]
+            self._inflight = 0
             if self._pending:
                 yield Sleep(self.cloud.sample(self.trigger_kind) * 0.25)
         self._consumer_active = False

@@ -144,6 +144,13 @@ def default_latency_profile() -> Dict[str, LatencyModel]:
         "fn_overhead": LatencyModel(0.00100, 0.30),
         # -- client channel ---------------------------------------------------
         "tcp_rtt": LatencyModel(0.000864, 0.30, per_kb=0.00001),
+        # -- serving compute (calibration assumption, not a paper number):
+        # autoregressive decode is weight-streaming-bound, so one batched
+        # step costs ~the batch-1 step plus a small per-slot term
+        # (size_kb carries the batch width); prefill is compute-bound per
+        # prompt token (size_kb carries the token count).
+        "decode_step": LatencyModel(0.02000, 0.05, per_kb=0.00050),
+        "prefill": LatencyModel(0.00200, 0.05, per_kb=0.00020),
         # -- ZooKeeper baseline ----------------------------------------------
         "zk_read": LatencyModel(0.00080, 0.30, per_kb=0.00002),
         "zk_write": LatencyModel(0.00220, 0.30, per_kb=0.00004),

@@ -1,12 +1,15 @@
 """Serving driver: FaaSKeeper queue/batcher front + jitted decode back end.
 
-Requests enter through the paper's per-session FIFO queues (batched
-event-function invocation, ordered completion) and are served by a reduced
-model's prefill+decode loop — the serverless request path with a real model
-behind it.
+Requests enter through the paper's per-session FIFO queues, route into one
+shared dispatch queue, and are served either by the continuous-batching
+decode scheduler (decoder-only families: slots re-admitted across sessions
+between decode steps) or by whole-batch generation (enc-dec families) — the
+serverless request path with a real model behind it.  ``mode='per-session'``
+runs the old one-queue-per-session batcher as the cost baseline.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --requests 12
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --requests 12 \
+      --sessions 3 --batch-size 4 --prompt-len 16
 """
 
 from __future__ import annotations
@@ -24,13 +27,10 @@ from ..coord.serving_front import InferenceRequest, ServingFrontend
 from ..core import SimCloud
 from ..models import build_model
 from ..serve.engine import make_decode_step, make_prefill
+from ..serve.scheduler import DecodeScheduler, supports_continuous
 
 
-def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
-                prompt_len: int = 16, sessions: int = 3, batch_size: int = 4):
-    cfg = configs.get(arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+def _whole_batch_model_fn(model, params, max_new: int):
     prefill = jax.jit(make_prefill(model))
     decode = jax.jit(make_decode_step(model))
 
@@ -44,19 +44,54 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
         gen = np.asarray(jnp.stack(outs, axis=1))
         return [gen[i] for i in range(gen.shape[0])]
 
-    cloud = SimCloud(seed=0)
-    frontend = ServingFrontend(cloud, model_fn, batch_size=batch_size)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    # each session pipelines its requests over its own FIFO channel (order
-    # within a session preserved — paper §3.2 "vertical scaling"); different
-    # sessions submit concurrently, so the queue batches across arrivals
-    per_session = {f"s{i % sessions}": [] for i in range(n_requests)}
+    return model_fn
+
+
+def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
+                   batch_size: int, max_new: int, prompt_len: int,
+                   temperature: float = 0.0, top_k: int = 0,
+                   mesh=None) -> ServingFrontend:
+    """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
+
+    ``continuous`` falls back to the shared whole-batch flavour for families
+    without a per-slot decode path (enc-dec).
+    """
+    if mode not in ("continuous", "shared", "per-session"):
+        raise ValueError(f"unknown serving mode {mode!r}")
+    if mode == "continuous" and supports_continuous(cfg):
+        sched = DecodeScheduler(model, params, n_slots=batch_size,
+                                max_seq=prompt_len + max_new,
+                                temperature=temperature, top_k=top_k,
+                                mesh=mesh)
+        return ServingFrontend(cloud, scheduler=sched, batch_size=batch_size)
+    if temperature or top_k:
+        raise ValueError(
+            "temperature/top-k sampling needs the continuous scheduler "
+            f"(decoder-only families); the {cfg.family!r}/{mode!r} "
+            "whole-batch path decodes greedily")
+    front_mode = "per-session" if mode == "per-session" else "shared"
+    model_fn = _whole_batch_model_fn(model, params, max_new)
+    return ServingFrontend(cloud, model_fn, batch_size=batch_size,
+                           mode=front_mode)
+
+
+def spawn_workload(cloud: SimCloud, frontend: ServingFrontend, *, vocab: int,
+                   n_requests: int, sessions: int, prompt_len: int,
+                   max_new: int, seed: int = 0) -> None:
+    """Spawn the standard serving workload: requests round-robin across
+    ``sessions`` concurrent clients, each session pipelining its requests
+    over its own FIFO channel (order within a session preserved — paper
+    §3.2 "vertical scaling"); different sessions submit concurrently, and
+    the shared dispatch queue batches across their arrivals.  The caller
+    runs the cloud."""
+    rng = np.random.default_rng(seed)
+    per_session = {}
     for i in range(n_requests):
-        prompt = rng.integers(0, cfg.vocab, size=prompt_len).astype(np.int32)
-        per_session[f"s{i % sessions}"].append(
-            InferenceRequest(session=f"s{i % sessions}", request_id=f"r{i}",
-                             prompt=prompt, max_tokens=max_new))
+        sess = f"s{i % sessions}"
+        per_session.setdefault(sess, []).append(InferenceRequest(
+            session=sess, request_id=f"r{i}",
+            prompt=rng.integers(0, vocab, size=prompt_len).astype(np.int32),
+            max_tokens=max_new))
 
     def session_driver(reqs):
         for req in reqs:
@@ -65,17 +100,46 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
 
     for sess, reqs in per_session.items():
         cloud.spawn(session_driver(reqs), name=f"client:{sess}")
+
+
+def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
+                prompt_len: int = 16, sessions: int = 3, batch_size: int = 4,
+                mode: str = "continuous", temperature: float = 0.0,
+                top_k: int = 0, seed: int = 0, quiet: bool = False):
+    cfg = configs.get(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    cloud = SimCloud(seed=seed)
+    frontend = build_frontend(cloud, cfg, model, params, mode=mode,
+                              batch_size=batch_size, max_new=max_new,
+                              prompt_len=prompt_len, temperature=temperature,
+                              top_k=top_k)
+    t0 = time.time()
+    spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
+                   sessions=sessions, prompt_len=prompt_len, max_new=max_new)
     cloud.run()
     served = sum(len(v) for v in frontend.completions.values())
-    print(f"served {served}/{n_requests} requests in {time.time()-t0:.1f}s wall "
-          f"({cloud.now:.3f}s simulated)")
-    for sess, ids in sorted(frontend.completions.items()):
-        print(f"  session {sess}: completions in order {ids}")
-    stats = frontend.runtime.stats.get("serve")
-    print(f"function invocations: {stats.invocations} "
-          f"(batching {n_requests}/{stats.invocations} = "
-          f"{n_requests/stats.invocations:.1f} req/invoke); "
-          f"cost ${frontend.runtime.cost_usd():.6f}")
+    if not quiet:
+        print(f"served {served}/{n_requests} requests in {time.time()-t0:.1f}s wall "
+              f"({cloud.now:.3f}s simulated)")
+        for sess, ids in sorted(frontend.completions.items()):
+            print(f"  session {sess}: completions in order {ids}")
+        stats = frontend.runtime.stats.get("serve")
+        inv = stats.invocations if stats else 0
+        dropped = frontend.dropped_requests()
+        line = (f"function invocations: {inv} "
+                f"(batching {served}/{inv} = "
+                f"{served/inv if inv else 0.0:.1f} req/invoke); "
+                f"cost ${frontend.runtime.cost_usd():.6f}; "
+                f"dropped {dropped} (dead-letter {frontend.dead_letter_ids()})")
+        print(line)
+        if frontend.scheduler is not None:
+            s = frontend.scheduler.stats()
+            print(f"decode scheduler: occupancy {s['occupancy']:.2f} "
+                  f"slots/step over {s['steps']} steps, "
+                  f"{s['decode_tokens']} decode + {s['prefill_tokens']} "
+                  f"prefill tokens")
     return frontend
 
 
@@ -85,9 +149,18 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--sessions", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="dispatch batch width == decode slots")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "shared", "per-session"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
-                sessions=args.sessions)
+                sessions=args.sessions, batch_size=args.batch_size,
+                prompt_len=args.prompt_len, mode=args.mode,
+                temperature=args.temperature, top_k=args.top_k)
 
 
 if __name__ == "__main__":

@@ -7,12 +7,18 @@ A cache layer is a dict:
 Stacked over layers (leading L dim) so that decode can ``lax.scan`` over the
 layer stack.  ``positions`` doubles as the validity mask, which makes full and
 sliding-window caches the same code path.
+
+``pos`` (the absolute position of the first new token) may be a scalar — the
+whole batch decodes in lockstep — or a ``(B,)`` vector, which is what the
+continuous-batching scheduler uses: each slot of the decode batch sits at its
+own sequence position, so admissions at different times share one ring.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from .layers import COMPUTE_DTYPE
@@ -27,14 +33,27 @@ def init_attn_cache(n_layers: int, B: int, T: int, n_kv: int, head_dim: int) -> 
     }
 
 
+def decode_positions(pos, B: int, S: int) -> jnp.ndarray:
+    """(B, S) absolute query positions for a decode step.
+
+    ``pos`` is the scalar shared length or a ``(B,)`` per-slot length vector.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = pos[:, None]
+    return jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
 def cache_update_layer(layer_cache: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
                        pos: jnp.ndarray) -> Dict:
     """Insert S_new tokens at absolute position ``pos`` (ring for windows).
 
     layer_cache k/v: (B, T, Hkv, D); k_new/v_new: (B, S, Hkv, D).
+    ``pos`` scalar (lockstep batch) or (B,) (per-slot continuous batching).
     """
     T = layer_cache["k"].shape[1]
-    S = k_new.shape[1]
+    B, S = k_new.shape[0], k_new.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
     if S > T:
         # prefill longer than the (windowed) cache: only the trailing T
         # tokens can ever be attended to — drop the rest (static slice, and
@@ -42,13 +61,21 @@ def cache_update_layer(layer_cache: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray
         k_new, v_new = k_new[:, -T:], v_new[:, -T:]
         pos = pos + (S - T)
         S = T
-    abs_pos = pos + jnp.arange(S, dtype=jnp.int32)            # (S,)
-    slots = abs_pos % T                                       # ring slots
-    k = layer_cache["k"].at[:, slots].set(k_new.astype(layer_cache["k"].dtype))
-    v = layer_cache["v"].at[:, slots].set(v_new.astype(layer_cache["v"].dtype))
-    positions = layer_cache["positions"].at[:, slots].set(
-        jnp.broadcast_to(abs_pos[None, :], (k_new.shape[0], S))
-    )
+    if pos.ndim == 0:
+        abs_pos = pos + jnp.arange(S, dtype=jnp.int32)        # (S,)
+        slots = abs_pos % T                                   # ring slots
+        k = layer_cache["k"].at[:, slots].set(k_new.astype(layer_cache["k"].dtype))
+        v = layer_cache["v"].at[:, slots].set(v_new.astype(layer_cache["v"].dtype))
+        positions = layer_cache["positions"].at[:, slots].set(
+            jnp.broadcast_to(abs_pos[None, :], (B, S))
+        )
+    else:
+        abs_pos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+        slots = abs_pos % T                                   # per-row ring slots
+        b = jnp.arange(B, dtype=jnp.int32)[:, None]
+        k = layer_cache["k"].at[b, slots].set(k_new.astype(layer_cache["k"].dtype))
+        v = layer_cache["v"].at[b, slots].set(v_new.astype(layer_cache["v"].dtype))
+        positions = layer_cache["positions"].at[b, slots].set(abs_pos)
     return {"k": k, "v": v, "positions": positions}
 
 
@@ -56,3 +83,56 @@ def cache_kv_view(layer_cache: Dict) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndar
     """Returns (k, v, kv_positions, kv_valid) for sdpa()."""
     pos = layer_cache["positions"]
     return layer_cache["k"], layer_cache["v"], pos, pos >= 0
+
+
+# ---------------------------------------------------------------------------
+# Slot-level cache surgery (continuous-batching scheduler support)
+# ---------------------------------------------------------------------------
+
+
+def batched_cache(model, n_slots: int, seq_len: int) -> Dict:
+    """A decode cache for ``n_slots`` independent sequences: the model's
+    normal batch cache with the shared scalar ``length`` widened to a
+    per-slot ``(n_slots,)`` vector."""
+    cache = dict(model.init_cache(n_slots, seq_len))
+    cache["length"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def _slot_axis(batch_shape: Tuple[int, ...], one_shape: Tuple[int, ...]) -> Optional[int]:
+    """The axis along which a B=1 cache leaf scatters into the batch leaf.
+
+    Cache trees from ``init_cache(B, T)`` and ``init_cache(1, T)`` are
+    structurally identical, so the slot axis is the unique axis where the
+    shapes disagree (stacked leaves carry a leading layer dim, tail leaves do
+    not — shape matching handles both without per-family knowledge).
+    """
+    diffs = [i for i, (a, b) in enumerate(zip(batch_shape, one_shape)) if a != b]
+    if not diffs:
+        return None  # n_slots == 1: leaves are identical, replace wholesale
+    if len(diffs) > 1 or one_shape[diffs[0]] != 1:
+        raise ValueError(
+            f"cannot locate slot axis: batch {batch_shape} vs one {one_shape}")
+    return diffs[0]
+
+
+def cache_insert_slot(batch_cache: Dict, one_cache: Dict, slot: int) -> Dict:
+    """Scatter a freshly-prefilled B=1 cache into row ``slot`` of a batched
+    cache (prefill-on-admit).  ``batch_cache['length']`` must be per-slot
+    (see :func:`batched_cache`); the admitted sequence keeps its own length."""
+    length = batch_cache["length"].at[slot].set(
+        jnp.asarray(one_cache["length"], jnp.int32).reshape(()))
+    rest = {k: v for k, v in batch_cache.items() if k != "length"}
+    one_rest = {k: v for k, v in one_cache.items() if k != "length"}
+
+    def ins(b, o):
+        ax = _slot_axis(tuple(b.shape), tuple(o.shape))
+        if ax is None:
+            return o.astype(b.dtype)
+        idx = [slice(None)] * b.ndim
+        idx[ax] = slot
+        return b.at[tuple(idx)].set(jnp.squeeze(o, axis=ax).astype(b.dtype))
+
+    out = jax.tree_util.tree_map(ins, rest, one_rest)
+    out["length"] = length
+    return out

@@ -267,7 +267,9 @@ class Mamba2LM(DenseLM):
 
         return self._stack_step(params, cache, tokens, body)
 
-    def prefill(self, params, tokens):
+    def prefill(self, params, tokens, *, seq_len=None):
+        # SSM state has no sequence dim: seq_len is accepted for API
+        # uniformity with the attention families but does not change shapes.
         cfg = self.cfg
         cache = self.init_cache(tokens.shape[0], tokens.shape[1])
 

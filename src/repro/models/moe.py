@@ -304,7 +304,7 @@ class MoELM(DenseLM):
         cfg = self.cfg
         rs = jnp.asarray(cfg.residual_scale, x.dtype)
         B, S = x.shape[0], x.shape[1]
-        positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+        positions = kvcache.decode_positions(pos, B, S)
         h = layers.apply_norm(cfg.norm, p["attn_norm"], x)
         q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
         new_cache = kvcache.cache_update_layer(layer_cache, k, v, pos)

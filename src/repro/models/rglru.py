@@ -288,7 +288,7 @@ class RecurrentLM(DenseLM):
         B, S = tokens.shape
         x = layers.embed_tokens(params["embedding"], cfg, tokens)
         pos = cache["length"]
-        positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+        positions = kvcache.decode_positions(pos, B, S)
 
         def sb_body(carry, pc):
             h = carry
@@ -326,6 +326,6 @@ class RecurrentLM(DenseLM):
     def decode_step(self, params, cache, tokens):
         return self._step_with_cache(params, cache, tokens, want_state=False)
 
-    def prefill(self, params, tokens):
-        cache = self.init_cache(tokens.shape[0], tokens.shape[1])
+    def prefill(self, params, tokens, *, seq_len=None):
+        cache = self.init_cache(tokens.shape[0], seq_len or tokens.shape[1])
         return self._step_with_cache(params, cache, tokens, want_state=True)

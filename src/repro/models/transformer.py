@@ -9,7 +9,7 @@ and whisper.py (which adds cross-attention).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +55,13 @@ def dense_layer_fwd(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
 
 def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
                        layer_cache: Dict, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
-    """One-token (or short-S) step against a ring cache."""
+    """One-token (or short-S) step against a ring cache.
+
+    ``pos`` scalar (lockstep batch) or (B,) per-slot (continuous batching).
+    """
     rs = jnp.asarray(cfg.residual_scale, x.dtype)
     B, S = x.shape[0], x.shape[1]
-    positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    positions = kvcache.decode_positions(pos, B, S)
     h = layers.apply_norm(cfg.norm, p["attn_norm"], x)
     q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
     new_cache = kvcache.cache_update_layer(layer_cache, k, v, pos)
@@ -204,8 +207,14 @@ class DenseLM:
         new_cache["length"] = cache["length"] + tokens.shape[1]
         return constrain(logits, "logits"), new_cache
 
-    def prefill(self, params: Dict, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
-        """Full-sequence forward that also fills the cache (kind='prefill')."""
-        cache = self.init_cache(tokens.shape[0], tokens.shape[1])
+    def prefill(self, params: Dict, tokens: jnp.ndarray, *,
+                seq_len: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+        """Full-sequence forward that also fills the cache (kind='prefill').
+
+        ``seq_len`` sizes the ring for the *total* sequence (prompt + decode
+        budget) so the scheduler can prefill straight into a slot-shaped
+        cache; default is the prompt length (legacy behaviour).
+        """
+        cache = self.init_cache(tokens.shape[0], seq_len or tokens.shape[1])
         logits, cache = self.decode_step(params, cache, tokens)
         return logits, cache

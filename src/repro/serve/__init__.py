@@ -1,4 +1,6 @@
 from .engine import make_decode_step, make_prefill
 from .sampling import greedy, temperature_sample
+from .scheduler import CompletedRequest, DecodeScheduler, supports_continuous
 
-__all__ = ["make_decode_step", "make_prefill", "greedy", "temperature_sample"]
+__all__ = ["make_decode_step", "make_prefill", "greedy", "temperature_sample",
+           "CompletedRequest", "DecodeScheduler", "supports_continuous"]

@@ -12,8 +12,20 @@ def greedy(logits: jnp.ndarray) -> jnp.ndarray:
 
 def temperature_sample(key, logits: jnp.ndarray, temperature: float = 1.0,
                        top_k: int = 0) -> jnp.ndarray:
+    """Temperature + top-k sampling over the last axis.
+
+    Top-k restricts the support to *exactly* ``k`` candidates: masking by
+    value (``lg < kth``) would keep every logit tied with the k-th one, so we
+    sample an index into ``jax.lax.top_k``'s result and map it back through
+    the returned indices (ties broken deterministically, like the sort).
+    ``top_k >= vocab`` degrades to plain temperature sampling; ``top_k <= 0``
+    (0 or the common -1 sentinel) disables top-k entirely.
+    """
     lg = logits.astype(jnp.float32) / max(temperature, 1e-6)
-    if top_k:
-        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
-        lg = jnp.where(lg < kth, -1e30, lg)
+    if top_k > 0:
+        k = min(int(top_k), lg.shape[-1])
+        vals, idx = jax.lax.top_k(lg, k)
+        choice = jax.random.categorical(key, vals, axis=-1)
+        return jnp.take_along_axis(
+            idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,266 @@
+"""Slot-based continuous-batching decode scheduler.
+
+A fixed-width decode batch (``n_slots``) steps one token per active slot per
+call; free slots are re-admitted from a shared cross-session queue of pending
+requests.  Admission prefILLs the request into a B=1, full-ring cache
+(``prefill(..., seq_len=max_seq)``) and scatters it into the slot row of the
+live batched cache (``models/kvcache.cache_insert_slot``), so sequences at
+different positions share one ring — the per-slot ``(B,)`` ``length`` vector
+is what the model decode paths consume via ``kvcache.decode_positions``.
+
+Per-session FIFO is preserved structurally: a session's next request is only
+admitted after its predecessor completes (the ``_active_sessions`` gate), and
+the pending list is scanned in arrival order.
+
+``mesh`` applies :func:`repro.dist.sharding.cache_shardings` to the live
+decode cache: on a concrete mesh the cache is ``device_put`` onto the
+resolved shardings (the 16x16 decode path); on an abstract mesh the resolved
+specs are recorded in ``cache_specs`` for inspection/lowering.
+
+Supported families: ``dense``, ``moe``, ``ssm``, ``hybrid`` (decoder-only
+LMs; the enc-dec families keep the whole-batch serving path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import kvcache
+from . import sampling
+
+CONTINUOUS_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def supports_continuous(cfg) -> bool:
+    return getattr(cfg, "family", None) in CONTINUOUS_FAMILIES
+
+
+@dataclasses.dataclass
+class _Request:
+    session: str
+    request_id: str
+    prompt: Any                 # (P,) int tokens
+    max_new: int
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    session: str
+    request_id: str
+    tokens: np.ndarray          # (max_new,) generated tokens
+    admitted_step: int
+    finished_step: int
+
+
+class DecodeScheduler:
+    """Continuous batching over a shared per-slot ring cache."""
+
+    def __init__(self, model, params, *, n_slots: int = 4, max_seq: int = 64,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 mesh=None):
+        if not supports_continuous(model.cfg):
+            raise ValueError(
+                f"family {model.cfg.family!r} has no per-slot decode path; "
+                f"continuous batching supports {CONTINUOUS_FAMILIES}")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.top_k = top_k
+        self._key = jax.random.key(seed)
+
+        self.cache = kvcache.batched_cache(model, n_slots, max_seq)
+        self.cache_specs = None
+        if mesh is not None:
+            from ..dist.sharding import cache_shardings
+
+            shardings = cache_shardings(self.cache, mesh)
+            self.cache_specs = jax.tree_util.tree_map(
+                lambda s: s.spec, shardings)
+            if isinstance(mesh, jax.sharding.Mesh):   # concrete: place the cache
+                self.cache = jax.device_put(self.cache, shardings)
+
+        self._decode = jax.jit(self._step_impl)
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, seq_len=max_seq))
+
+        self.slots: List[Optional[Dict]] = [None] * n_slots
+        self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
+        # device-side per-slot output ring: tokens accumulate on device and
+        # are pulled to host once per *completion*, not once per step — a
+        # decode step is a single async dispatch with no host sync
+        self.out_buf = jnp.zeros((n_slots, max_seq), jnp.int32)
+        self.out_pos = jnp.zeros((n_slots,), jnp.int32)
+        self.pending: List[_Request] = []
+        self._active_sessions: set = set()
+        # -- occupancy / throughput accounting --------------------------------
+        self.steps = 0
+        self.slot_steps = 0           # sum over steps of active slots
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.admitted = 0
+        self.completed = 0
+
+    # -- admission ----------------------------------------------------------------
+
+    def submit(self, session: str, request_id: str, prompt, max_new: int) -> None:
+        """Enqueue a request; admitted into a free slot as soon as its
+        session has no in-flight predecessor (per-session FIFO gate).
+
+        ``max_new`` is clamped to what the slot can hold without silent
+        corruption: the output ring caps it at ``max_seq``, and on a
+        full-attention KV ring (no sliding window — detected via
+        ``cache_len``) generation past ``max_seq - len(prompt)`` would wrap
+        the ring and evict prompt keys mid-decode, so the budget stops
+        there; a prompt that leaves no decode room at all is rejected
+        outright (clamping would silently drop its leading tokens).
+        Windowed and ring-free (SSM) families wrap by design.
+        """
+        prompt = np.asarray(prompt)
+        limit = self.max_seq
+        cache_len = getattr(self.model, "cache_len", None)
+        has_full_ring = (self.model.cfg.family != "ssm"   # SSM: no KV ring
+                         and cache_len is not None
+                         and cache_len(self.max_seq + 1) > self.max_seq)
+        if has_full_ring:
+            room = self.max_seq - int(prompt.shape[-1])
+            if room <= 0:
+                raise ValueError(
+                    f"request {request_id!r}: prompt of {int(prompt.shape[-1])} "
+                    f"tokens leaves no decode room in the max_seq={self.max_seq} "
+                    "full-attention ring; size max_seq >= prompt + max_new")
+            limit = min(limit, room)
+        max_new = max(1, min(max_new, limit))
+        self.pending.append(_Request(session, request_id, prompt, max_new))
+        self._fill_slots()
+
+    def busy(self) -> bool:
+        return any(s is not None for s in self.slots) or bool(self.pending)
+
+    def free_slots(self) -> int:
+        return sum(1 for s in self.slots if s is None)
+
+    def wants_more(self) -> bool:
+        """Whether claiming more queued work could improve occupancy.
+
+        Any free slot justifies claiming deeper: a FIFO queue can hold a long
+        run of one session's (gated) requests in front of another session's
+        admissible one, so the lookahead must not be capped — held-back
+        requests wait in ``pending`` in arrival order and are requeued on a
+        crash, so over-claiming never loses or reorders work."""
+        return self.free_slots() > 0
+
+    def _fill_slots(self) -> None:
+        if not self.pending:
+            return
+        held: List[_Request] = []
+        for req in self.pending:
+            slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+            if slot is None:
+                held.append(req)
+                continue
+            if req.session in self._active_sessions:
+                held.append(req)      # FIFO gate: predecessor still decoding
+                continue
+            self._admit(slot, req)
+        self.pending = held
+
+    def _admit(self, slot: int, req: _Request) -> None:
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]      # (1, P)
+        logits, one = self._prefill(self.params, prompt)
+        tok = self._sample(logits[:, -1])                      # (1,)
+        self.cache = kvcache.cache_insert_slot(self.cache, one, slot)
+        self.last_tokens = self.last_tokens.at[slot].set(tok[0])
+        self.out_buf = self.out_buf.at[slot, 0].set(tok[0])
+        self.out_pos = self.out_pos.at[slot].set(1)
+        self.slots[slot] = {
+            "req": req,
+            "n_out": 1,
+            "admitted_step": self.steps,
+        }
+        self._active_sessions.add(req.session)
+        self.prefill_tokens += int(prompt.shape[1])
+        self.admitted += 1
+
+    # -- decode loop ---------------------------------------------------------------
+
+    def _sample(self, logits: jnp.ndarray, key=None) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return sampling.greedy(logits)
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        return sampling.temperature_sample(key, logits, self.temperature,
+                                           self.top_k)
+
+    def _step_impl(self, params, cache, last_tokens, out_buf, out_pos, key):
+        """Jitted: decode one token per slot, sample, append to the output
+        ring.  Pure device program — nothing returns to the host."""
+        logits, cache = self.model.decode_step(params, cache, last_tokens[:, None])
+        toks = self._sample(logits[:, -1], key)
+        b = jnp.arange(self.n_slots, dtype=jnp.int32)
+        out_buf = out_buf.at[b, out_pos % self.max_seq].set(toks)
+        return cache, toks, out_buf, out_pos + 1
+
+    def step(self) -> List[CompletedRequest]:
+        """One batched decode step over the whole slot array; returns the
+        requests that completed this step (their slots are refilled from the
+        pending list before returning)."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            self._fill_slots()
+            return []
+        self._key, sub = jax.random.split(self._key)
+        self.cache, self.last_tokens, self.out_buf, self.out_pos = self._decode(
+            self.params, self.cache, self.last_tokens, self.out_buf,
+            self.out_pos, sub)
+        self.steps += 1
+        self.slot_steps += len(active)
+        self.decode_tokens += len(active)
+        finished: List[CompletedRequest] = []
+        for i in active:
+            st = self.slots[i]
+            st["n_out"] += 1
+            if st["n_out"] >= st["req"].max_new:
+                req = st["req"]
+                finished.append(CompletedRequest(
+                    session=req.session, request_id=req.request_id,
+                    tokens=np.asarray(self.out_buf[i, : req.max_new]),
+                    admitted_step=st["admitted_step"], finished_step=self.steps))
+                self.slots[i] = None
+                self._active_sessions.discard(req.session)
+                self.completed += 1
+        if finished:
+            self._fill_slots()
+        return finished
+
+    def reset(self) -> None:
+        """Abort all in-flight work (crash recovery: the queue layer
+        redelivers; completed requests are deduped by the frontend)."""
+        self.slots = [None] * self.n_slots
+        self.pending = []
+        self._active_sessions.clear()
+        self.last_tokens = jnp.zeros((self.n_slots,), jnp.int32)
+        self.out_buf = jnp.zeros((self.n_slots, self.max_seq), jnp.int32)
+        self.out_pos = jnp.zeros((self.n_slots,), jnp.int32)
+
+    # -- reporting ------------------------------------------------------------------
+
+    def occupancy(self) -> float:
+        """Mean active slots per decode step (the batching lever)."""
+        return self.slot_steps / self.steps if self.steps else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "steps": self.steps,
+            "occupancy": round(self.occupancy(), 3),
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "admitted": self.admitted,
+            "completed": self.completed,
+        }

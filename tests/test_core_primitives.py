@@ -154,6 +154,77 @@ def test_fifo_queue_redelivery_on_crash():
     assert q.redeliveries == 1
 
 
+def test_push_immediate_accounts_wire_kb():
+    """In-cloud pushes (heartbeat, distributor, serve routing) must count
+    wire KB exactly like latency-bearing pushes — ``push_kb`` is the queue
+    wire meter (SQS bills per 64 kB unit), so skipping it under-counts."""
+    cloud = SimCloud(seed=0)
+    q = FifoQueue(cloud, "q", handler=None)
+    cloud.run_task(q.push("a", size_kb=0.5))
+    kb_after_push = q.push_kb
+    assert kb_after_push == 0.5
+    q.push_immediate("b", size_kb=0.5)
+    assert q.push_kb == 2 * kb_after_push
+    # both paths clamp to the 64-byte SQS minimum billable size
+    q.push_immediate("c", size_kb=0.001)
+    assert q.push_kb == 2 * kb_after_push + 0.064
+    assert q.pushes == 3
+
+
+def test_retry_then_drop_lands_in_dead_letter():
+    """A poison batch is retried ``max_retries`` times, then dropped to the
+    dead-letter list (observable DLQ semantics) — and the queue moves on to
+    later messages instead of livelocking."""
+    from repro.core import SimulatedCrash
+
+    cloud = SimCloud(seed=1)
+    processed = []
+
+    def handler(batch):
+        if any(m.body == "poison" for m in batch):
+            raise SimulatedCrash("poison")
+        processed.extend(m.body for m in batch)
+        if False:
+            yield
+        return None
+
+    q = FifoQueue(cloud, "q", handler=handler, batch_size=1, max_retries=2)
+    cloud.run_task(q.push("poison"))
+    cloud.run_task(q.push("ok"))
+    cloud.run()
+    assert q.dropped == 1
+    assert [m.body for m in q.dead_letters] == ["poison"]
+    assert q.redeliveries == 2  # 3 deliveries = initial + max_retries redeliveries
+    assert processed == ["ok"], "queue must advance past the poison batch"
+
+
+def test_claim_pending_and_requeue_preserve_fifo():
+    """``claim_pending`` hands not-yet-delivered messages to the running
+    consumer (continuous batching's long-poll receive); ``requeue`` returns
+    them behind the in-flight batch, preserving FIFO order."""
+    cloud = SimCloud(seed=2)
+    batches, claims = [], []
+
+    def handler(batch):
+        batches.append([m.seq for m in batch])
+        extra = q.claim_pending(2)
+        claims.append([m.seq for m in extra])
+        q.requeue(extra[1:])     # keep one, hand the rest back
+        if False:
+            yield
+        return None
+
+    q = FifoQueue(cloud, "q", handler=handler, batch_size=2)
+    for i in range(6):
+        q.push_immediate(i)      # all queued before the trigger fires
+    cloud.run()
+    # invocation 1: batch [1,2], claims [3,4], requeues 4;
+    # invocation 2: batch [4,5] (requeued 4 redelivered first), claims [6]
+    assert batches == [[1, 2], [4, 5]]
+    assert claims == [[3, 4], [6]]
+    assert q.claims == 3 and q.requeues == 1
+
+
 def test_queue_sequence_numbers_monotone():
     cloud = SimCloud(seed=2)
     q = FifoQueue(cloud, "q", handler=None)
