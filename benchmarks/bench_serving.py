@@ -1,4 +1,5 @@
-"""Serving economics: continuous cross-session batching vs per-session batcher.
+"""Serving economics: continuous cross-session batching vs per-session
+batcher, and the paged-block KV pool vs per-slot rings.
 
 The paper's cost argument (§4.2, §6) is that serverless serving only wins
 when per-invocation cost is amortized across batched arrivals.  This section
@@ -6,16 +7,21 @@ drives the *same* request workload (``sessions`` concurrent clients, fixed
 prompt/decode lengths) through
 
   * the old per-session batcher (one FIFO queue + its own event function per
-    session — a model batch never mixes sessions), and
-  * the shared continuous-batching scheduler (per-session queues route into
-    one dispatch queue; decode slots are re-admitted across sessions between
-    steps),
+    session — a model batch never mixes sessions),
+  * the shared continuous-batching scheduler over per-slot rings (PR 2), and
+  * the same scheduler over the shared paged-block KV pool with chunked
+    prefill,
 
 and reports req/invoke (batch occupancy), tokens/s (simulated), decode-slot
-occupancy, and $/1k tokens.  Compute is billed under the calibrated
-``prefill``/``decode_step`` latency models (identical for both modes), so
-the comparison is deterministic; the real reduced model still generates the
-tokens, and jits are pre-warmed so ``wall_s`` reflects steady state.
+occupancy, $/1k tokens, and the KV memory footprint.  A second cell drives
+the scheduler directly with one **long-prompt interloper** arriving into a
+busy decode batch and measures per-step wall latency: a monolithic ring
+admission stalls every slot for the full prefill, a chunked paged admission
+bounds the stall at one ``prefill_chunk``.  Compute is billed under the
+calibrated ``prefill``/``decode_step`` latency models (identical across
+modes), so the cost comparison is deterministic; the real reduced model
+still generates the tokens, and jits are pre-warmed so wall times reflect
+steady state.
 """
 
 from __future__ import annotations
@@ -23,6 +29,9 @@ from __future__ import annotations
 import time
 
 from .common import save_artifact, table
+
+PAGE_SIZE = 8
+PREFILL_CHUNK = 8
 
 
 def _drive_workload(cloud, frontend, cfg, *, n_requests, sessions, prompt_len,
@@ -38,24 +47,31 @@ def _drive_workload(cloud, frontend, cfg, *, n_requests, sessions, prompt_len,
 
 def _measure(mode, cfg, model, params, *, n_requests, sessions, prompt_len,
              max_new, batch_size):
+    import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.core import SimCloud
     from repro.launch.serve import build_frontend
 
+    front_mode, _, kv_mode = mode.partition(":")
     cloud = SimCloud(seed=0)
-    frontend = build_frontend(cloud, cfg, model, params, mode=mode,
+    frontend = build_frontend(cloud, cfg, model, params, mode=front_mode,
                               batch_size=batch_size, max_new=max_new,
-                              prompt_len=prompt_len)
+                              prompt_len=prompt_len, kv_mode=kv_mode or "paged",
+                              page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK)
     # pre-warm every jit shape the workload can hit, outside the billed clock
     if frontend.scheduler is not None:
-        import jax
-
         sched = frontend.scheduler
-        sched._prefill(params, jnp.zeros((1, prompt_len), jnp.int32))
+        if sched.kv_mode == "ring":
+            sched._prefill(params, jnp.zeros((1, prompt_len), jnp.int32))
+        else:
+            for C in {min(PREFILL_CHUNK, prompt_len),
+                      prompt_len % PREFILL_CHUNK or PREFILL_CHUNK}:
+                sched._chunk(params, sched.cache, jnp.zeros((1, C), jnp.int32), 0)
         sched._decode(params, sched.cache, sched.last_tokens, sched.out_buf,
-                      sched.out_pos, jax.random.key(0))
+                      sched.out_pos, jnp.ones((sched.n_slots,), bool),
+                      jax.random.key(0))
     else:
         for b in range(1, batch_size + 1):
             frontend.model_fn([np.zeros(prompt_len, np.int32)] * b)
@@ -71,6 +87,7 @@ def _measure(mode, cfg, model, params, *, n_requests, sessions, prompt_len,
     assert total_inv == stats.invocations, frontend.runtime.stats.keys()
     cost = frontend.runtime.cost_usd()
     tokens = served * max_new
+    sstats = frontend.serving_stats()
     row = {
         "mode": mode,
         "served": f"{served}/{n_requests}",
@@ -82,11 +99,89 @@ def _measure(mode, cfg, model, params, *, n_requests, sessions, prompt_len,
         "usd_per_1k_tok": round(1000.0 * cost / tokens, 8),
         "occupancy": (round(frontend.scheduler.occupancy(), 2)
                       if frontend.scheduler is not None else ""),
+        "kv_kib": (round(sstats["kv_pool_bytes"] / 1024, 1)
+                   if "kv_pool_bytes" in sstats else ""),
+        "kv_hw_kib": (round(sstats["kv_high_water_bytes"] / 1024, 1)
+                      if "kv_high_water_bytes" in sstats else ""),
         "dropped": frontend.dropped_requests(),
         "wall_s": round(wall, 1),
     }
     assert served == n_requests, f"{mode}: served {served}/{n_requests}"
     return row
+
+
+INTERLOPER_AT = 4       # steady-state steps before the long prompt arrives
+STALL_WINDOW = 18       # steps measured from its arrival (covers admission)
+
+
+def _interloper_cell(cfg, model, params, *, kv_mode, n_slots=4, short_len=16,
+                     long_len=512, max_new=20, prefill_chunk=32):
+    """Per-step wall latency under a long-prompt admission mid-decode.
+
+    Short requests keep the batch busy; at step ``INTERLOPER_AT`` a
+    ``long_len``-token prompt arrives.  Ring mode prefills it monolithically
+    inside admission — every other slot stalls for the whole prompt in one
+    step; paged mode lands one ``prefill_chunk`` per step, bounding each
+    step's stall at a chunk.  The headline number is p95/max over the
+    ``STALL_WINDOW`` steps from the arrival (a whole-run p95 would mostly
+    average steady-state steps and hide a rare 100 ms stall).  Also returns
+    the KV memory numbers at equal occupancy.
+    """
+    import jax
+    import numpy as np
+
+    from repro.serve.scheduler import DecodeScheduler
+
+    sched = DecodeScheduler(model, params, n_slots=n_slots,
+                            max_seq=long_len + max_new, kv_mode=kv_mode,
+                            page_size=PAGE_SIZE, prefill_chunk=prefill_chunk)
+    rng = np.random.default_rng(0)
+
+    def scenario():
+        samples = []
+        rid = [0]
+
+        def submit(length, max_tokens):
+            sched.submit(f"s{rid[0]}", f"r{rid[0]}",
+                         rng.integers(0, cfg.vocab, size=length).astype(np.int32),
+                         max_tokens)
+            rid[0] += 1
+
+        for _ in range(n_slots):
+            submit(short_len, max_new)
+        step = 0
+        while sched.busy():
+            t0 = time.time()
+            if step == INTERLOPER_AT:      # the long-prompt interloper
+                submit(long_len, max_new)
+            sched.step()
+            jax.block_until_ready(sched.out_pos)
+            samples.append((time.time() - t0) * 1000.0)
+            step += 1
+            if step < 30 and not sched.busy():
+                submit(short_len, max_new)  # keep occupancy up
+            assert step < 500
+        return samples
+
+    scenario()                              # warm every jit shape
+    sched.reset()
+    rng = np.random.default_rng(0)
+    samples = scenario()
+    mem = sched.kv_memory_stats()
+    arr = np.asarray(samples)
+    window = arr[INTERLOPER_AT:INTERLOPER_AT + STALL_WINDOW]
+    return {
+        "kv_mode": kv_mode,
+        "steps": len(samples),
+        "p50_step_ms": round(float(np.percentile(arr, 50)), 2),
+        "stall_p95_ms": round(float(np.percentile(window, 95)), 2),
+        "stall_max_ms": round(float(window.max()), 2),
+        "occupancy": round(sched.occupancy(), 2),
+        "kv_pool_kib": round(mem["kv_pool_bytes"] / 1024, 1),
+        "kv_high_water_kib": round(mem["kv_high_water_bytes"] / 1024, 1),
+        **({"kv_pages_high_water": mem["kv_pages_high_water"],
+            "kv_pages": mem["kv_pages"]} if kv_mode == "paged" else {}),
+    }
 
 
 def run(n: int = 32, arch: str = "minicpm-2b", sessions: int = 8,
@@ -101,32 +196,62 @@ def run(n: int = 32, arch: str = "minicpm-2b", sessions: int = 8,
     params = model.init(jax.random.key(0))
 
     rows = []
-    for mode in ("per-session", "continuous"):
+    for mode in ("per-session", "continuous:ring", "continuous:paged"):
         rows.append(_measure(mode, cfg, model, params, n_requests=n,
                              sessions=sessions, prompt_len=prompt_len,
                              max_new=max_new, batch_size=batch_size))
 
-    base, cont = rows
-    summary = {
-        "arch": arch, "requests": n, "sessions": sessions,
-        "prompt_len": prompt_len, "max_new": max_new, "batch_size": batch_size,
-        "rows": rows,
-        "invocation_reduction": round(
-            base["invocations"] / cont["invocations"], 2),
-        "cost_reduction": round(base["cost_usd"] / cont["cost_usd"], 2),
-        "cross_session_batching": cont["req_per_invoke"] > 1.0,
-        "fewer_invocations_than_baseline":
-            cont["invocations"] < base["invocations"],
-    }
+    base, ring, paged = rows
     print(table(
         f"serving: {arch} x {n} requests / {sessions} sessions "
         f"(prompt {prompt_len}, decode {max_new}, width {batch_size})",
         rows, ["mode", "served", "invocations", "req_per_invoke", "sim_s",
                "tok_per_sim_s", "cost_usd", "usd_per_1k_tok", "occupancy",
-               "dropped"]))
-    print(f"\ncontinuous vs per-session: {summary['invocation_reduction']}x "
-          f"fewer invocations, {summary['cost_reduction']}x cheaper, "
-          f"occupancy {cont['req_per_invoke']} req/invoke")
+               "kv_kib", "kv_hw_kib", "dropped"]))
+
+    inter = [_interloper_cell(cfg, model, params, kv_mode=m)
+             for m in ("ring", "paged")]
+    print(table(
+        "long-prompt interloper: step wall latency over the "
+        f"{STALL_WINDOW}-step admission window (monolithic vs chunked "
+        "prefill) and KV memory at equal occupancy",
+        inter, ["kv_mode", "steps", "p50_step_ms", "stall_p95_ms",
+                "stall_max_ms", "occupancy", "kv_pool_kib",
+                "kv_high_water_kib"]))
+
+    i_ring, i_paged = inter
+    summary = {
+        "arch": arch, "requests": n, "sessions": sessions,
+        "prompt_len": prompt_len, "max_new": max_new, "batch_size": batch_size,
+        "page_size": PAGE_SIZE, "prefill_chunk": PREFILL_CHUNK,
+        "rows": rows,
+        "interloper": inter,
+        "invocation_reduction": round(
+            base["invocations"] / paged["invocations"], 2),
+        "cost_reduction": round(base["cost_usd"] / paged["cost_usd"], 2),
+        "cross_session_batching": paged["req_per_invoke"] > 1.0,
+        "fewer_invocations_than_baseline":
+            paged["invocations"] < base["invocations"],
+        # the two levers the paged rewrite is for: live-token KV memory and
+        # chunk-bounded admission stalls
+        "paged_kv_below_ring":
+            i_paged["kv_high_water_kib"] < i_ring["kv_high_water_kib"],
+        "paged_kv_reduction": round(
+            i_ring["kv_high_water_kib"] / max(i_paged["kv_high_water_kib"], 1e-9), 2),
+        "paged_stall_p95_below_ring":
+            i_paged["stall_p95_ms"] < i_ring["stall_p95_ms"],
+        "interloper_stall_reduction": round(
+            i_ring["stall_p95_ms"] / max(i_paged["stall_p95_ms"], 1e-9), 2),
+        "interloper_max_stall_reduction": round(
+            i_ring["stall_max_ms"] / max(i_paged["stall_max_ms"], 1e-9), 2),
+    }
+    print(f"\ncontinuous(paged) vs per-session: "
+          f"{summary['invocation_reduction']}x fewer invocations, "
+          f"{summary['cost_reduction']}x cheaper; paged vs ring: "
+          f"{summary['paged_kv_reduction']}x less KV high-water, "
+          f"{summary['interloper_stall_reduction']}x lower p95 step stall "
+          f"while a long prompt is admitted")
+    assert summary["paged_kv_below_ring"], (i_ring, i_paged)
     save_artifact("BENCH_serving", summary)
     return summary
 

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Build the full dry-run matrix artifact: every (arch x shape x mesh) cell is
+# lowered AND compiled against 512 spoofed host devices, and the per-cell
+# memory / flops / wire-bytes records land in artifacts/dryrun_matrix.json
+# (consumed by tests/test_system.py::test_dryrun_matrix_artifact_complete).
+#
+# Usage:  scripts/run_matrices.sh [out.json]
+#
+# The full matrix is compile-heavy (the 110B/235B cells take minutes each on
+# CPU); CI runs it as a non-blocking job.  JAX_PLATFORMS=cpu keeps the spoofed
+# device count deterministic on machines with accelerators.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-artifacts/dryrun_matrix.json}"
+mkdir -p "$(dirname "$OUT")"
+
+JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.dryrun --all --mesh both --out "$OUT"
+
+python - "$OUT" <<'EOF'
+import json, sys
+rows = json.load(open(sys.argv[1]))
+ok = [r for r in rows if r.get("status") == "OK"]
+print(f"{len(ok)}/{len(rows)} cells OK -> {sys.argv[1]}")
+for r in rows:
+    if r.get("status") != "OK":
+        print("  FAIL:", r["arch"], r["shape"], r["mesh"], r.get("error"))
+EOF

@@ -151,6 +151,22 @@ class ServingFrontend:
     def dropped_requests(self) -> int:
         return len(self.dead_letter_ids())
 
+    def serving_stats(self) -> Dict[str, Any]:
+        """One merged stats dict for drivers/benchmarks: invocation counts
+        and cost from the runtime, scheduler occupancy/token counters and —
+        in paged mode — the KV pool gauges (pages in use / high water)."""
+        st = self.runtime.stats.get("serve")
+        out: Dict[str, Any] = {
+            "mode": self.mode if self.scheduler is None else "continuous",
+            "invocations": st.invocations if st else 0,
+            "cost_usd": self.runtime.cost_usd(),
+            "dropped": self.dropped_requests(),
+        }
+        if self.scheduler is not None:
+            out.update(self.scheduler.stats())
+            out.update(self.scheduler.kv_memory_stats())
+        return out
+
     # -- event function: whole-batch flavour ------------------------------------------
 
     def _body_batch(self, ctx, batch) -> Generator:
@@ -197,9 +213,14 @@ class ServingFrontend:
         try:
             feed(batch)
             while sched.busy():
-                active = sched.n_slots - sched.free_slots()
+                prev_slot_steps = sched.slot_steps
                 finished = sched.step()
-                if sched.prefill_tokens > billed_prefill:  # admissions billed
+                # bill what actually decoded inside this step (a slot whose
+                # last prefill chunk landed mid-step joins the same tick)
+                active = sched.slot_steps - prev_slot_steps
+                if sched.prefill_tokens > billed_prefill:
+                    # admissions billed per landed chunk (paged) or per
+                    # monolithic prefill (ring) — same token total either way
                     yield Sleep(self.cloud.sample(
                         "prefill", size_kb=sched.prefill_tokens - billed_prefill))
                     billed_prefill = sched.prefill_tokens

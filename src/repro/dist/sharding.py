@@ -259,6 +259,8 @@ def batch_shardings(batch_abs: PyTree, mesh) -> PyTree:
 # decode-cache kv-ring leaf keys; dims are indexed from the right so stacked
 # (leading layer dim) and unstacked leaves share one rule
 _CACHE_KV_KEYS = frozenset({"k", "v", "xk", "xv"})
+# paged-pool leaf keys: (..., n_pages, page_size, H, D) shared across slots
+_CACHE_POOL_KEYS = frozenset({"kp", "vp"})
 
 
 def cache_shardings(cache_abs: PyTree, mesh) -> PyTree:
@@ -266,8 +268,13 @@ def cache_shardings(cache_abs: PyTree, mesh) -> PyTree:
 
     kv rings (..., B, T, H, D): batch on dp; heads on model when the head
     count divides, else fall back to the time dim (GQA archs with few kv
-    heads — the divisibility guard the sharding tests pin).  SSM states
-    shard their head dim, conv tails and RG-LRU states their channel dim.
+    heads — the divisibility guard the sharding tests pin).  Paged pools
+    (..., n_pages, page_size, H, D) have no slot axis — every slot's page
+    table indexes one shared pool, so the pool stays *replicated over dp*
+    and shards heads on model (falling back to the page dim for GQA archs);
+    page tables (..., n_slots, max_pages) follow the slot batch onto dp.
+    SSM states shard their head dim, conv tails and RG-LRU states their
+    channel dim.
     """
     rules = MeshRules.for_mesh(mesh)
     dp = tuple(rules.dp) or None
@@ -286,7 +293,11 @@ def cache_shardings(cache_abs: PyTree, mesh) -> PyTree:
                 return True
             return False
 
-        if key in _CACHE_KV_KEYS and nd >= 4:    # (..., B, T, H, D)
+        if key in _CACHE_POOL_KEYS and nd >= 4:  # (..., Np, ps, H, D) shared pool
+            put(-2, rules.model) or put(-4, rules.model)
+        elif key == "page_table" and nd >= 2:    # (..., n_slots, max_pages)
+            put(-2, dp)
+        elif key in _CACHE_KV_KEYS and nd >= 4:  # (..., B, T, H, D)
             put(-4, dp)
             put(-2, rules.model) or put(-3, rules.model)
         elif key == "ssm" and nd >= 4:           # (..., B, H, P, N)

@@ -31,11 +31,16 @@ from ..serve.scheduler import DecodeScheduler, supports_continuous
 
 
 def _whole_batch_model_fn(model, params, max_new: int):
-    prefill = jax.jit(make_prefill(model))
     decode = jax.jit(make_decode_step(model))
+    prefills = {}   # per prompt length: cache sized prompt + decode budget,
+    # so the decoder ring never wraps and evicts prompt keys mid-generation
 
     def model_fn(prompts: List[np.ndarray]) -> List[np.ndarray]:
         toks = jnp.asarray(np.stack(prompts))
+        P = toks.shape[1]
+        prefill = prefills.get(P)
+        if prefill is None:
+            prefill = prefills[P] = jax.jit(make_prefill(model, seq_len=P + max_new))
         tok, cache = prefill(params, toks)
         outs = [tok]
         for _ in range(max_new - 1):
@@ -50,11 +55,15 @@ def _whole_batch_model_fn(model, params, max_new: int):
 def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    batch_size: int, max_new: int, prompt_len: int,
                    temperature: float = 0.0, top_k: int = 0,
-                   mesh=None) -> ServingFrontend:
+                   mesh=None, kv_mode: str = "paged", page_size: int = 16,
+                   prefill_chunk: int = None,
+                   kv_pages: int = None) -> ServingFrontend:
     """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
 
     ``continuous`` falls back to the shared whole-batch flavour for families
-    without a per-slot decode path (enc-dec).
+    without a per-slot decode path (enc-dec).  ``kv_mode='paged'`` (default)
+    serves from the shared paged-block KV pool with chunked prefill;
+    ``'ring'`` keeps the per-slot ring + monolithic-prefill baseline.
     """
     if mode not in ("continuous", "shared", "per-session"):
         raise ValueError(f"unknown serving mode {mode!r}")
@@ -62,7 +71,10 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
         sched = DecodeScheduler(model, params, n_slots=batch_size,
                                 max_seq=prompt_len + max_new,
                                 temperature=temperature, top_k=top_k,
-                                mesh=mesh)
+                                mesh=mesh, kv_mode=kv_mode,
+                                page_size=page_size,
+                                prefill_chunk=prefill_chunk,
+                                kv_pages=kv_pages)
         return ServingFrontend(cloud, scheduler=sched, batch_size=batch_size)
     if temperature or top_k:
         raise ValueError(
@@ -105,7 +117,9 @@ def spawn_workload(cloud: SimCloud, frontend: ServingFrontend, *, vocab: int,
 def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 prompt_len: int = 16, sessions: int = 3, batch_size: int = 4,
                 mode: str = "continuous", temperature: float = 0.0,
-                top_k: int = 0, seed: int = 0, quiet: bool = False):
+                top_k: int = 0, seed: int = 0, quiet: bool = False,
+                kv_mode: str = "paged", page_size: int = 16,
+                prefill_chunk: int = None, kv_pages: int = None):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -114,7 +128,9 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
     frontend = build_frontend(cloud, cfg, model, params, mode=mode,
                               batch_size=batch_size, max_new=max_new,
                               prompt_len=prompt_len, temperature=temperature,
-                              top_k=top_k)
+                              top_k=top_k, kv_mode=kv_mode,
+                              page_size=page_size,
+                              prefill_chunk=prefill_chunk, kv_pages=kv_pages)
     t0 = time.time()
     spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
                    sessions=sessions, prompt_len=prompt_len, max_new=max_new)
@@ -135,11 +151,16 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 f"dropped {dropped} (dead-letter {frontend.dead_letter_ids()})")
         print(line)
         if frontend.scheduler is not None:
-            s = frontend.scheduler.stats()
+            s = frontend.serving_stats()
             print(f"decode scheduler: occupancy {s['occupancy']:.2f} "
                   f"slots/step over {s['steps']} steps, "
                   f"{s['decode_tokens']} decode + {s['prefill_tokens']} "
                   f"prefill tokens")
+            if s.get("kv_mode") == "paged":
+                print(f"kv pool: {s['kv_pages_high_water']}/{s['kv_pages']} "
+                      f"pages high-water ({s['kv_high_water_bytes']/1024:.1f} "
+                      f"of {s['kv_pool_bytes']/1024:.1f} KiB), "
+                      f"{s['prefill_chunks']} prefill chunks")
     return frontend
 
 
@@ -156,11 +177,21 @@ def main() -> None:
                     choices=["continuous", "shared", "per-session"])
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--kv-mode", default="paged", choices=["paged", "ring"],
+                    help="paged-block KV pool (default) or per-slot rings")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV pool page")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admission chunk size in tokens (default: whole prompt)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="pool size in pages (default: slots x max_pages)")
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
                 sessions=args.sessions, batch_size=args.batch_size,
                 prompt_len=args.prompt_len, mode=args.mode,
-                temperature=args.temperature, top_k=args.top_k)
+                temperature=args.temperature, top_k=args.top_k,
+                kv_mode=args.kv_mode, page_size=args.page_size,
+                prefill_chunk=args.prefill_chunk, kv_pages=args.kv_pages)
 
 
 if __name__ == "__main__":

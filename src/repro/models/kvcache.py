@@ -1,27 +1,53 @@
-"""Decode-time caches.
+"""Decode-time caches: per-slot rings and the shared paged-block KV pool.
 
-A cache layer is a dict:
+Two storage layouts behind one layer-level interface
+(:func:`cache_update_layer` / :func:`cache_kv_view` dispatch on the dict
+keys):
+
+**Ring** (the classic layout).  A cache layer is a dict:
   k, v      : (B, T, Hkv, D)  ring buffer (T = window for SWA archs)
   positions : (B, T) int32    absolute position stored in each slot (-1 empty)
+Memory is reserved at worst case: every row owns ``T`` slots whether the
+sequence is 3 tokens or 3000.
 
-Stacked over layers (leading L dim) so that decode can ``lax.scan`` over the
-layer stack.  ``positions`` doubles as the validity mask, which makes full and
-sliding-window caches the same code path.
+**Paged pool** (continuous-batching serving).  One shared pool per layer plus
+a per-slot page table:
+  kp, vp     : (n_pages, page_size, Hkv, D)  shared block pool
+  page_table : (B, max_pages) int32          slot's logical->physical map
+                                             (-1 = unmapped)
+Token at absolute position ``p`` of slot ``b`` lives at
+``kp[page_table[b, p // page_size], p % page_size]``.  Pages are handed out
+by the host-side :class:`PageAllocator` (alloc-on-write, free-on-completion),
+so pool memory scales with *live tokens* instead of ``n_slots * max_seq``.
+Validity is derived, not stored: lane ``t`` is attendable iff its page is
+mapped and ``t < upto`` (the caller's live length) — no positions array.
+Writes to unmapped pages are dropped (the physical index is pushed out of
+bounds and JAX scatters drop OOB updates), so a freed slot's stale decode
+traffic can never corrupt a page that now belongs to another slot.
 
-``pos`` (the absolute position of the first new token) may be a scalar — the
-whole batch decodes in lockstep — or a ``(B,)`` vector, which is what the
-continuous-batching scheduler uses: each slot of the decode batch sits at its
-own sequence position, so admissions at different times share one ring.
+Both layouts are stacked over layers (leading L dim) so decode can
+``lax.scan`` the layer stack; the page table is replicated per layer (int32,
+negligible) so the scan carries one pytree.  ``pos`` may be a scalar or a
+``(B,)`` vector exactly as before.
+
+The paged view gathers pages in *logical* order, so when no ring wrap has
+occurred the gathered (B, max_pages*page_size, Hkv, D) tensor is lane-for-
+lane identical to the ring view and attention results match bit-for-bit —
+the property the paged parity suite pins.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .layers import COMPUTE_DTYPE
+
+# Leaf keys of the shared page pool: no slot axis, never sliced or masked
+# per-slot.
+POOL_KEYS = frozenset({"kp", "vp"})
 
 
 def init_attn_cache(n_layers: int, B: int, T: int, n_kv: int, head_dim: int) -> Dict:
@@ -44,13 +70,29 @@ def decode_positions(pos, B: int, S: int) -> jnp.ndarray:
     return jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32), (B, S))
 
 
+def is_paged(layer_cache: Dict) -> bool:
+    return "kp" in layer_cache
+
+
+def cache_capacity(layer_cache: Dict) -> int:
+    """Static token capacity of one row of a layer cache (ring T, or the
+    page table's logical span for the pool)."""
+    if is_paged(layer_cache):
+        return layer_cache["page_table"].shape[-1] * layer_cache["kp"].shape[-3]
+    return layer_cache["k"].shape[-3]
+
+
 def cache_update_layer(layer_cache: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
                        pos: jnp.ndarray) -> Dict:
-    """Insert S_new tokens at absolute position ``pos`` (ring for windows).
+    """Insert S_new tokens at absolute position ``pos``.
 
-    layer_cache k/v: (B, T, Hkv, D); k_new/v_new: (B, S, Hkv, D).
+    Ring layout scatters into per-row ring slots (``pos % T``); paged layout
+    routes each token through the page table into the shared pool.
+    layer_cache k/v or kp/vp as documented above; k_new/v_new: (B, S, Hkv, D).
     ``pos`` scalar (lockstep batch) or (B,) (per-slot continuous batching).
     """
+    if is_paged(layer_cache):
+        return _paged_update_layer(layer_cache, k_new, v_new, pos)
     T = layer_cache["k"].shape[1]
     B, S = k_new.shape[0], k_new.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
@@ -79,14 +121,116 @@ def cache_update_layer(layer_cache: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray
     return {"k": k, "v": v, "positions": positions}
 
 
-def cache_kv_view(layer_cache: Dict) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (k, v, kv_positions, kv_valid) for sdpa()."""
+def _paged_update_layer(layer_cache: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                       pos: jnp.ndarray) -> Dict:
+    kp, vp, pt = layer_cache["kp"], layer_cache["vp"], layer_cache["page_table"]
+    n_pages, page_size = kp.shape[-4], kp.shape[-3]
+    max_pages = pt.shape[-1]
+    B, S = k_new.shape[0], k_new.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    abs_pos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]      # (B, S)
+    page_idx = abs_pos // page_size
+    offset = abs_pos % page_size
+    pid = jnp.take_along_axis(pt, jnp.clip(page_idx, 0, max_pages - 1), axis=-1)
+    # unmapped / out-of-table positions are pushed out of bounds: JAX drops
+    # OOB scatter updates, so stale traffic from freed or admitting slots can
+    # never land in a page it does not own.
+    pid = jnp.where((page_idx < max_pages) & (pid >= 0), pid, n_pages)
+    kp = kp.at[pid, offset].set(k_new.astype(kp.dtype))
+    vp = vp.at[pid, offset].set(v_new.astype(vp.dtype))
+    return {"kp": kp, "vp": vp, "page_table": pt}
+
+
+def cache_kv_view(layer_cache: Dict, upto: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (k, v, kv_positions, kv_valid) for sdpa().
+
+    Ring layout reads the buffers directly (``positions`` doubles as the
+    validity mask).  Paged layout gathers the slot's pages from the pool in
+    logical order; ``upto`` (scalar or (B,) live length) is required there —
+    lanes at or past it, and lanes on unmapped pages, are masked invalid.
+    """
+    if is_paged(layer_cache):
+        if upto is None:
+            raise ValueError("paged cache view needs `upto` (the live length)")
+        return _paged_kv_view(layer_cache, upto)
     pos = layer_cache["positions"]
     return layer_cache["k"], layer_cache["v"], pos, pos >= 0
 
 
+def _paged_kv_view(layer_cache: Dict, upto) -> Tuple[jnp.ndarray, ...]:
+    kp, vp, pt = layer_cache["kp"], layer_cache["vp"], layer_cache["page_table"]
+    n_pages, page_size, n_kv, head_dim = kp.shape[-4:]
+    B, max_pages = pt.shape[-2:]
+    T = max_pages * page_size
+    pid = jnp.clip(pt, 0, n_pages - 1)
+    k = kp[pid].reshape(B, T, n_kv, head_dim)
+    v = vp[pid].reshape(B, T, n_kv, head_dim)
+    kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    upto = jnp.asarray(upto, jnp.int32)
+    if upto.ndim == 0:
+        upto = jnp.broadcast_to(upto, (B,))
+    mapped = jnp.repeat(pt >= 0, page_size, axis=-1)                      # (B, T)
+    return k, v, kv_pos, mapped & (kv_pos < upto[:, None])
+
+
 # ---------------------------------------------------------------------------
-# Slot-level cache surgery (continuous-batching scheduler support)
+# Host-side page allocator (free list over the shared pool's page ids)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator for the paged pool.
+
+    Pure host-side bookkeeping: the device only ever sees the page table.
+    Invariant (pinned by the property tests): ``free_count + in_use ==
+    n_pages`` at every point, no page is ever handed out twice, and
+    :meth:`reset` returns the pool to fully free.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop() -> 0 first
+        self._mapped: set = set()
+        self.high_water = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._mapped)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: need {n} pages, {len(self._free)} free "
+                f"of {self.n_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._mapped.update(pages)
+        self.high_water = max(self.high_water, len(self._mapped))
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._mapped:
+                raise ValueError(f"freeing unmapped page {p}")
+            self._mapped.remove(p)
+            self._free.append(p)
+
+    def reset(self) -> None:
+        """Back to fully free; the high-water gauge restarts too, so
+        post-crash stats describe the replayed run, not the aborted one."""
+        self._free = list(range(self.n_pages - 1, -1, -1))
+        self._mapped.clear()
+        self.high_water = 0
+
+
+# ---------------------------------------------------------------------------
+# Batched-cache construction & slot-level surgery (scheduler support)
 # ---------------------------------------------------------------------------
 
 
@@ -99,6 +243,137 @@ def batched_cache(model, n_slots: int, seq_len: int) -> Dict:
     return cache
 
 
+def paged_cache(model, n_slots: int, *, page_size: int, n_pages: int,
+                max_pages: int) -> Dict:
+    """A paged decode cache: every KV ring of the model's batch cache is
+    replaced by a shared ``(n_pages, page_size, Hkv, D)`` pool plus a
+    per-slot ``(n_slots, max_pages)`` page table (replicated across the
+    stacked layer dim so the decode scan carries one pytree).  Ring-free
+    state (SSM/RG-LRU recurrences, conv tails) keeps its per-slot layout."""
+
+    def transform(tree):
+        if isinstance(tree, dict) and {"k", "v", "positions"} <= set(tree):
+            k = tree["k"]                       # (..., B, T, Hkv, D)
+            lead = k.shape[:-4]
+            out = {kk: transform(vv) for kk, vv in tree.items()
+                   if kk not in ("k", "v", "positions")}
+            out["kp"] = jnp.zeros(lead + (n_pages, page_size) + k.shape[-2:], k.dtype)
+            out["vp"] = jnp.zeros(lead + (n_pages, page_size) + k.shape[-2:], k.dtype)
+            out["page_table"] = -jnp.ones(lead + (n_slots, max_pages), jnp.int32)
+            return out
+        if isinstance(tree, dict):
+            return {kk: transform(vv) for kk, vv in tree.items()}
+        return tree
+
+    cache = transform(dict(model.init_cache(n_slots, page_size)))
+    cache["length"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                 for k in path)
+
+
+def _slot_axis_of(keys: Tuple[str, ...]) -> int:
+    """Axis carrying the slot (batch) dim for a per-slot cache leaf.
+
+    Stacked leaves (dense/moe/ssm top-level arrays, hybrid ``blocks``) carry
+    a leading layer dim, so B sits at axis 1; the hybrid ``tail`` layers and
+    the per-slot ``length`` vector are unstacked (axis 0)."""
+    return 0 if keys[0] in ("tail", "length") else 1
+
+
+def mask_slot_rows(new_cache: Dict, old_cache: Dict, keep: jnp.ndarray) -> Dict:
+    """Keep a decode step's updates only for slots where ``keep`` is True.
+
+    Inactive rows (freed slots, slots mid-chunked-admission) are restored to
+    their pre-step state so a batched decode step cannot advance their
+    lengths or evolve their recurrent states.  Shared pool leaves have no
+    slot axis and pass through — unmapped page tables already drop their
+    writes at the scatter."""
+
+    def sel(path, new, old):
+        keys = _path_keys(path)
+        if keys[-1] in POOL_KEYS:
+            return new
+        ax = _slot_axis_of(keys)
+        shape = [1] * new.ndim
+        shape[ax] = keep.shape[0]
+        return jnp.where(keep.reshape(shape), new, old)
+
+    return jax.tree_util.tree_map_with_path(sel, new_cache, old_cache)
+
+
+def cache_slot_view(batch_cache: Dict, slot) -> Dict:
+    """The B=1 view of one slot: per-slot leaves sliced at ``slot`` (kept
+    dim), shared pool leaves passed through whole.  ``slot`` may be traced —
+    the chunked-prefill step jits over it."""
+
+    def slice_leaf(path, leaf):
+        keys = _path_keys(path)
+        if keys[-1] in POOL_KEYS:
+            return leaf
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=_slot_axis_of(keys))
+
+    return jax.tree_util.tree_map_with_path(slice_leaf, batch_cache)
+
+
+def cache_clear_slot(batch_cache: Dict, slot) -> Dict:
+    """Zero one slot's rows (page table and ring positions to -1): fresh
+    state for an admission, and — on completion — an unmapped page table so
+    the freed slot's residual decode writes are dropped, never landing in
+    pages that now belong to another slot."""
+
+    def clear(path, leaf):
+        keys = _path_keys(path)
+        if keys[-1] in POOL_KEYS:
+            return leaf
+        ax = _slot_axis_of(keys)
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slot
+        fill = -1 if keys[-1] in ("page_table", "positions") else 0
+        return leaf.at[tuple(idx)].set(jnp.asarray(fill, leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(clear, batch_cache)
+
+
+def set_page_row(batch_cache: Dict, slot: int, row) -> Dict:
+    """Install a slot's (max_pages,) page-table row on every replicated
+    page-table leaf (no-op for ring or ring-free caches)."""
+    row = jnp.asarray(row, jnp.int32)
+
+    def upd(path, leaf):
+        if _path_keys(path)[-1] != "page_table":
+            return leaf
+        idx = [slice(None)] * leaf.ndim
+        idx[-2] = slot
+        return leaf.at[tuple(idx)].set(row)
+
+    return jax.tree_util.tree_map_with_path(upd, batch_cache)
+
+
+def kv_bytes_per_token(cache: Dict) -> int:
+    """Bytes of KV state per stored token, summed over layers (ring k/v or
+    pool kp/vp leaves; recurrent state excluded — it is O(1) per slot)."""
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        key = _path_keys(path)[-1]
+        if key in POOL_KEYS:            # (..., Np, ps, H, D)
+            tokens = leaf.shape[-4] * leaf.shape[-3]
+            total += leaf.size * leaf.dtype.itemsize // tokens
+        elif key in ("k", "v"):         # (..., B, T, H, D)
+            per_row_tokens = leaf.shape[-3]
+            total += (leaf.size * leaf.dtype.itemsize
+                      // (leaf.shape[-4] * per_row_tokens))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, cache)
+    return total
+
+
 def _slot_axis(batch_shape: Tuple[int, ...], one_shape: Tuple[int, ...]) -> Optional[int]:
     """The axis along which a B=1 cache leaf scatters into the batch leaf.
 
@@ -109,16 +384,18 @@ def _slot_axis(batch_shape: Tuple[int, ...], one_shape: Tuple[int, ...]) -> Opti
     """
     diffs = [i for i, (a, b) in enumerate(zip(batch_shape, one_shape)) if a != b]
     if not diffs:
-        return None  # n_slots == 1: leaves are identical, replace wholesale
+        return None  # identical shapes: pool leaves / n_slots == 1 — replace wholesale
     if len(diffs) > 1 or one_shape[diffs[0]] != 1:
         raise ValueError(
             f"cannot locate slot axis: batch {batch_shape} vs one {one_shape}")
     return diffs[0]
 
 
-def cache_insert_slot(batch_cache: Dict, one_cache: Dict, slot: int) -> Dict:
-    """Scatter a freshly-prefilled B=1 cache into row ``slot`` of a batched
-    cache (prefill-on-admit).  ``batch_cache['length']`` must be per-slot
+def cache_insert_slot(batch_cache: Dict, one_cache: Dict, slot) -> Dict:
+    """Scatter a B=1 cache into row ``slot`` of a batched cache (prefill-on-
+    admit, and the write-back half of the chunked-prefill step).  Leaves with
+    identical shapes — the shared page pool, or everything when n_slots == 1
+    — are replaced wholesale.  ``batch_cache['length']`` must be per-slot
     (see :func:`batched_cache`); the admitted sequence keeps its own length."""
     length = batch_cache["length"].at[slot].set(
         jnp.asarray(one_cache["length"], jnp.int32).reshape(()))

@@ -177,13 +177,18 @@ def mamba_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     )
     xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
 
+    # state with L > 1 is a chunked-prefill continuation: the conv carry and
+    # the SSD initial state h0 thread the recurrence across chunk boundaries
+    # (from a zero state this is the same computation as monolithic prefill).
     decode = state is not None and L == 1
-    carry = state["conv"] if decode else None
+    continuing = state is not None
+    carry = state["conv"] if continuing else None
     conv_in = xbc
     xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], carry=carry)
     new_state: Optional[Dict] = None
-    if decode or want_state:
-        prev = carry if decode else jnp.zeros((B_, s.d_conv - 1, d_xbc), conv_in.dtype)
+    if continuing or want_state:
+        prev = (carry if carry is not None
+                else jnp.zeros((B_, s.d_conv - 1, d_xbc), conv_in.dtype))
         tail = jnp.concatenate([prev.astype(conv_in.dtype), conv_in], axis=1)[:, -(s.d_conv - 1):]
         new_state = {"conv": tail}
 
@@ -200,8 +205,9 @@ def mamba_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
         y = y[:, None]
         new_state["ssm"] = h
     else:
-        y, hfin = ssd_chunked(xh, dtp, A, Bm, Cm, min(cfg.ssm.chunk, L))
-        if want_state:
+        h0 = state["ssm"] if continuing else None
+        y, hfin = ssd_chunked(xh, dtp, A, Bm, Cm, min(cfg.ssm.chunk, L), h0=h0)
+        if new_state is not None:
             new_state["ssm"] = hfin
 
     y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)

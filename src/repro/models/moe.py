@@ -153,8 +153,16 @@ def _moe_decode_stationary(xf, w_flat, e_flat, p, cfg, mesh, rules, cap):
       p["experts"]["w_down"])
 
 
-def moe_ffn(p: Dict, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+def moe_ffn(p: Dict, cfg: ArchConfig, x: jnp.ndarray, *, no_drop: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balance loss scalar).
+
+    ``no_drop=True`` (the decode/serving path) sizes capacity to the T*k
+    worst case so routing never drops a token: capacity dropping is a
+    training-throughput trade, and at serve time it would make outputs
+    depend on what else shares the batch — chunked prefill must produce the
+    same tokens as a monolithic prefill regardless of chunk boundaries.
+    """
     m = cfg.moe
     B, S, D = x.shape
     T = B * S
@@ -177,7 +185,7 @@ def moe_ffn(p: Dict, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.
     if policy is None:
         out = _dispatch_ffn(
             xf, w_flat, e_flat, p["experts"], cfg.mlp, 0, m.n_experts,
-            m.n_experts, _capacity(T, m),
+            m.n_experts, _capacity(T, m, no_drop=no_drop),
         )
     else:
         mesh = policy.mesh
@@ -188,12 +196,13 @@ def moe_ffn(p: Dict, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.
                 and m.n_experts % model_size == 0 and D % dp_size == 0):
             # decode: weights stay put; only tiny partials cross the wire
             out = _moe_decode_stationary(xf, w_flat, e_flat, p, cfg, mesh,
-                                         rules, _capacity(T, m))
+                                         rules, _capacity(T, m, no_drop=no_drop))
         elif T % dp_size != 0 or m.n_experts % model_size != 0:
             out = _dispatch_ffn(xf, w_flat, e_flat, p["experts"], cfg.mlp,
-                                0, m.n_experts, m.n_experts, _capacity(T, m))
+                                0, m.n_experts, m.n_experts,
+                                _capacity(T, m, no_drop=no_drop))
         else:
-            cap = _capacity(T // dp_size, m)
+            cap = _capacity(T // dp_size, m, no_drop=no_drop)
             e_per = m.n_experts // model_size  # static experts-per-rank
 
             def body(xf_l, w_l, e_l, experts_l):
@@ -217,7 +226,9 @@ def moe_ffn(p: Dict, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.
     return out.reshape(B, S, D), aux.astype(jnp.float32)
 
 
-def _capacity(tokens: int, m) -> int:
+def _capacity(tokens: int, m, *, no_drop: bool = False) -> int:
+    if no_drop:      # serving: cover the all-to-one-expert worst case
+        return tokens * m.top_k
     return max(4, int(math.ceil(tokens * m.top_k / m.n_experts * m.capacity_factor)))
 
 
@@ -309,12 +320,12 @@ class MoELM(DenseLM):
         q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
         new_cache = kvcache.cache_update_layer(layer_cache, k, v, pos)
         if S == 1:  # write-only cache update + append-attention (§Perf cell 3)
-            ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache)
+            ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache, upto=pos)
             o = layers.sdpa_append(q, ck, cv, k, v, window=cfg.sliding_window,
                                    q_positions=positions, kv_positions=kv_pos,
                                    kv_valid=kv_valid)
         else:
-            ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache)
+            ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache, upto=pos + S)
             o = layers.sdpa(q, ck, cv, causal=True, window=cfg.sliding_window,
                             q_positions=positions, kv_positions=kv_pos,
                             kv_valid=kv_valid)
@@ -322,6 +333,6 @@ class MoELM(DenseLM):
         h = jnp.einsum("bsq,qd->bsd", o, layers.wcast(p["attn"]["wo"], "row"))
         x = x + h * rs
         h = layers.apply_norm(cfg.norm, p["mlp_norm"], x)
-        h, _ = moe_ffn(p["moe"], cfg, h)
+        h, _ = moe_ffn(p["moe"], cfg, h, no_drop=True)
         x = x + h * rs
         return x, new_cache

@@ -105,8 +105,12 @@ def rec_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, wcast(p["w_y"], "col")))
     xw = jnp.einsum("bsd,dw->bsw", x, wcast(p["w_x"], "col"))
 
-    decode = state is not None and x.shape[1] == 1
-    carry = state["conv"] if decode else None
+    # a state with S > 1 is a *continuation* (chunked prefill): the conv
+    # carry and h0 thread the recurrence across chunk boundaries exactly as
+    # S == 1 decode does — from a zero state this reduces bitwise to the
+    # zero-padded monolithic prefill.
+    continuing = state is not None
+    carry = state["conv"] if continuing else None
     conv_in = xw
     # causal depthwise conv (no activation in griffin conv)
     if carry is None:
@@ -118,8 +122,9 @@ def rec_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     xc = xc + cast(p["conv_b"])
 
     new_state: Optional[Dict] = None
-    if decode or want_state:
-        prev = carry if decode else jnp.zeros((xw.shape[0], K - 1, xw.shape[2]), conv_in.dtype)
+    if continuing or want_state:
+        prev = (carry if carry is not None
+                else jnp.zeros((xw.shape[0], K - 1, xw.shape[2]), conv_in.dtype))
         tail = jnp.concatenate([prev.astype(conv_in.dtype), conv_in], axis=1)[:, -(K - 1):]
         new_state = {"conv": tail}
 
@@ -130,9 +135,9 @@ def rec_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     a, gated = rglru_gates(p, xc, cfg.n_heads)
     a = constrain(a, "lru_channels")
     gated = constrain(gated, "lru_channels")
-    h0 = state["h"] if decode else None
+    h0 = state["h"] if continuing else None
     h = rglru_scan(gated, a, h0=h0)
-    if decode or want_state:
+    if continuing or want_state:
         new_state["h"] = h[:, -1]
     h = h.astype(x.dtype) * y_branch
     return jnp.einsum("bsw,wd->bsd", h, wcast(p["w_out"], "row")), new_state
@@ -174,11 +179,11 @@ def _layer_step(p: Dict, cfg: ArchConfig, kind: str, x: jnp.ndarray,
             B, S = h.shape[0], h.shape[1]
             q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
             new_lc = kvcache.cache_update_layer(lc, k, v, pos)
-            if S > lc["k"].shape[1]:  # prefill longer than the ring window
+            if S > kvcache.cache_capacity(lc):  # prefill longer than the ring window
                 o = layers.sdpa(q, k, v, causal=True, window=cfg.hybrid.local_window,
                                 q_positions=positions, kv_positions=positions)
             else:
-                ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_lc)
+                ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_lc, upto=pos + S)
                 o = layers.sdpa(q, ck, cv, causal=True, window=cfg.hybrid.local_window,
                                 q_positions=positions, kv_positions=kv_pos, kv_valid=kv_valid)
             o = o.reshape(B, S, cfg.n_heads * cfg.the_head_dim())

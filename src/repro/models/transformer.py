@@ -55,7 +55,7 @@ def dense_layer_fwd(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
 
 def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
                        layer_cache: Dict, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
-    """One-token (or short-S) step against a ring cache.
+    """One-token (or short-S) step against a ring or paged cache.
 
     ``pos`` scalar (lockstep batch) or (B,) per-slot (continuous batching).
     """
@@ -65,7 +65,7 @@ def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     h = layers.apply_norm(cfg.norm, p["attn_norm"], x)
     q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
     new_cache = kvcache.cache_update_layer(layer_cache, k, v, pos)
-    if S > layer_cache["k"].shape[1]:
+    if S > kvcache.cache_capacity(layer_cache):
         # prefill-from-scratch longer than the (windowed) ring: the ring only
         # keeps the trailing window, so attend the fresh full-sequence k/v.
         o = layers.sdpa(q, k, v, causal=True, window=cfg.sliding_window,
@@ -73,12 +73,12 @@ def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     elif S == 1:
         # steady-state decode: attend the PRE-update cache + an explicit
         # new-token term; the updated ring is written but never re-read.
-        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache)
+        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache, upto=pos)
         o = layers.sdpa_append(q, ck, cv, k, v, window=cfg.sliding_window,
                                q_positions=positions, kv_positions=kv_pos,
                                kv_valid=kv_valid)
     else:
-        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache)
+        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache, upto=pos + S)
         o = layers.sdpa(q, ck, cv, causal=True, window=cfg.sliding_window,
                         q_positions=positions, kv_positions=kv_pos, kv_valid=kv_valid)
     o = o.reshape(B, S, cfg.n_heads * cfg.the_head_dim())
@@ -189,7 +189,9 @@ class DenseLM:
             h, new_lc = self._layer_decode(p, h, lc, pos)
             return h, new_lc
 
-        layer_caches = {k: cache[k] for k in ("k", "v", "positions")}
+        layer_keys = (("kp", "vp", "page_table") if "kp" in cache
+                      else ("k", "v", "positions"))
+        layer_caches = {k: cache[k] for k in layer_keys}
         fn = remat_wrap(body, "none")
         if cfg.scan_layers:
             x, new_caches = jax.lax.scan(fn, x, (params["layers"], layer_caches))

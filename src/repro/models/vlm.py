@@ -59,12 +59,14 @@ class VisionLM(DenseLM):
         return constrain(layers.lm_head(params["embedding"], cfg, x), "logits")
 
     def prefill(self, params: Dict, tokens: jnp.ndarray,
-                patch_embeds=None) -> Tuple[jnp.ndarray, Dict]:
+                patch_embeds=None, *, seq_len=None) -> Tuple[jnp.ndarray, Dict]:
+        """``seq_len`` counts *text* positions (prompt + decode budget); the
+        image prefix is added on top of it when patches are present."""
         if patch_embeds is None:
-            return super().prefill(params, tokens)
+            return super().prefill(params, tokens, seq_len=seq_len)
         img_x = self._project_patches(params, patch_embeds)
         B, n_p = img_x.shape[0], img_x.shape[1]
-        cache = self.init_cache(B, n_p + tokens.shape[1])
+        cache = self.init_cache(B, n_p + (seq_len or tokens.shape[1]))
         # run image prefix through the stack to fill the cache, then the text
         _, cache = self._decode_embedded(params, cache, img_x)
         return self.decode_step(params, cache, tokens)

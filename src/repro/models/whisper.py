@@ -144,7 +144,11 @@ class EncDecLM(DenseLM):
         return cache
 
     def prefill(self, params: Dict, tokens: jnp.ndarray,
-                frames: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Dict]:
+                frames: Optional[jnp.ndarray] = None, *,
+                seq_len: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+        """``seq_len`` sizes the decoder's self-attention ring for the total
+        sequence (prompt + decode budget); the prompt-sized default wraps —
+        and evicts prompt keys — once decode runs past it."""
         cfg = self.cfg
         B, S = tokens.shape
         if frames is None:
@@ -156,7 +160,7 @@ class EncDecLM(DenseLM):
 
         xk, xv = jax.vmap(kv_layer)(params["layers"]) if cfg.scan_layers else _stack_kv(
             params["layers"], cfg, enc_out)
-        cache = self.init_cache(B, S, n_frames=frames.shape[1])
+        cache = self.init_cache(B, seq_len or S, n_frames=frames.shape[1])
         cache["xk"], cache["xv"] = xk, xv
         return self._decode_with_cross(params, cache, tokens)
 

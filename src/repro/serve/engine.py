@@ -22,18 +22,50 @@ def make_decode_step(model) -> Callable:
     return serve_step
 
 
-def make_prefill(model) -> Callable:
+def make_chunk_step(model) -> Callable:
+    """Prefill one prompt chunk for a *single slot* of a batched paged cache.
+
+    The chunk runs as a B=1 forward against the shared page pool: per-slot
+    leaves (lengths, recurrent states, page-table rows) are sliced at
+    ``slot``, the pool is passed through whole (the slot exclusively owns the
+    pages its table maps, so the scatter is race-free against the other
+    slots' decode traffic), and the updated row is scattered back.  ``slot``
+    is traced, so one compile covers every slot at a given chunk length.
+    """
+    from ..models import kvcache
+
+    def chunk_step(params, cache, tokens, slot):
+        one = kvcache.cache_slot_view(cache, slot)
+        logits, one_new = model.decode_step(params, one, tokens)
+        return logits, kvcache.cache_insert_slot(cache, one_new, slot)
+
+    return chunk_step
+
+
+def make_prefill(model, seq_len: int = None) -> Callable:
+    """``seq_len`` sizes the cache for the *total* sequence (prompt + decode
+    budget): without it the legacy prompt-sized ring silently evicts the
+    oldest prompt tokens once decode wraps it."""
+
     def prefill(params, tokens, *extra):
-        logits, cache = model.prefill(params, tokens, *extra)
+        if seq_len is None:
+            logits, cache = model.prefill(params, tokens, *extra)
+        else:
+            logits, cache = model.prefill(params, tokens, *extra, seq_len=seq_len)
         next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_token, cache
 
     return prefill
 
 
-def generate(model, params, prompt: jnp.ndarray, max_new: int, *extra) -> jnp.ndarray:
-    """Greedy autoregressive generation (examples / integration tests)."""
-    prefill = jax.jit(make_prefill(model))
+def generate(model, params, prompt: jnp.ndarray, max_new: int, *extra,
+             seq_len: int = None) -> jnp.ndarray:
+    """Greedy autoregressive generation (examples / integration tests).
+
+    Pass ``seq_len >= prompt + max_new`` for an eviction-free decode — the
+    layout the continuous-batching scheduler uses, and the reference the
+    paged parity suite compares against."""
+    prefill = jax.jit(make_prefill(model, seq_len))
     step = jax.jit(make_decode_step(model))
     tok, cache = prefill(params, prompt, *extra)
     out = [tok]

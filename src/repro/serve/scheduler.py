@@ -1,12 +1,33 @@
-"""Slot-based continuous-batching decode scheduler.
+"""Slot-based continuous-batching decode scheduler over a paged KV pool.
 
 A fixed-width decode batch (``n_slots``) steps one token per active slot per
 call; free slots are re-admitted from a shared cross-session queue of pending
-requests.  Admission prefILLs the request into a B=1, full-ring cache
-(``prefill(..., seq_len=max_seq)``) and scatters it into the slot row of the
-live batched cache (``models/kvcache.cache_insert_slot``), so sequences at
-different positions share one ring — the per-slot ``(B,)`` ``length`` vector
-is what the model decode paths consume via ``kvcache.decode_positions``.
+requests.  Two KV layouts:
+
+* ``kv_mode='paged'`` (default): one shared ``(n_pages, page_size, Hkv, D)``
+  pool per layer plus a per-slot page table
+  (:func:`repro.models.kvcache.paged_cache`).  Pages are handed out by a
+  host-side free list (:class:`repro.models.kvcache.PageAllocator`) —
+  mapped on first write, freed on completion — so KV memory scales with
+  *live tokens*, not ``n_slots * max_seq``.  Admission is **chunked**: the
+  prompt is split into ``prefill_chunk``-sized pieces and one chunk runs per
+  :meth:`step` call (a B=1 forward against the shared pool, interleaved with
+  the batch's decode step), so a long-prompt admission never stalls the
+  other slots for more than one chunk.  A slot carries an ``admitting``
+  state until its last chunk lands and only then joins sampling.  Admission
+  is reservation-gated: a request is only admitted when the pool's
+  uncommitted pages cover its worst case, so lazy mapping can never deadlock
+  mid-decode.
+
+* ``kv_mode='ring'``: the PR 2 baseline — per-slot rings sized
+  ``max_seq`` and monolithic prefill-on-admit
+  (``prefill(..., seq_len=max_seq)`` scattered in via ``cache_insert_slot``).
+
+Either way the batched decode step masks non-active slots out of the token
+write, the output ring advance, and every per-slot cache row
+(``kvcache.mask_slot_rows``): a freed or mid-admission slot's stale state
+cannot advance, and its dangling pool writes are dropped by the unmapped
+page table.
 
 Per-session FIFO is preserved structurally: a session's next request is only
 admitted after its predecessor completes (the ``_active_sessions`` gate), and
@@ -18,7 +39,8 @@ resolved shardings (the 16x16 decode path); on an abstract mesh the resolved
 specs are recorded in ``cache_specs`` for inspection/lowering.
 
 Supported families: ``dense``, ``moe``, ``ssm``, ``hybrid`` (decoder-only
-LMs; the enc-dec families keep the whole-batch serving path).
+LMs; the enc-dec families keep the whole-batch serving path).  SSM keeps its
+ring-free O(1) state — no pool, but admission still chunks.
 """
 
 from __future__ import annotations
@@ -32,6 +54,7 @@ import numpy as np
 
 from ..models import kvcache
 from . import sampling
+from .engine import make_chunk_step
 
 CONTINUOUS_FAMILIES = ("dense", "moe", "ssm", "hybrid")
 
@@ -58,24 +81,54 @@ class CompletedRequest:
 
 
 class DecodeScheduler:
-    """Continuous batching over a shared per-slot ring cache."""
+    """Continuous batching over a shared paged pool (or per-slot rings)."""
 
     def __init__(self, model, params, *, n_slots: int = 4, max_seq: int = 64,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 mesh=None):
+                 mesh=None, kv_mode: str = "paged", page_size: int = 16,
+                 kv_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         if not supports_continuous(model.cfg):
             raise ValueError(
                 f"family {model.cfg.family!r} has no per-slot decode path; "
                 f"continuous batching supports {CONTINUOUS_FAMILIES}")
+        if kv_mode not in ("paged", "ring"):
+            raise ValueError(f"kv_mode must be 'paged' or 'ring', got {kv_mode!r}")
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.temperature = temperature
         self.top_k = top_k
+        self.kv_mode = kv_mode
         self._key = jax.random.key(seed)
+        self._has_kv = model.cfg.family != "ssm"   # SSM state is ring-free
 
-        self.cache = kvcache.batched_cache(model, n_slots, max_seq)
+        if kv_mode == "paged":
+            self.page_size = page_size
+            self.max_pages = -(-max_seq // page_size)
+            self.n_pages = (kv_pages if kv_pages is not None
+                            else n_slots * self.max_pages)
+            if self._has_kv and self.n_pages < self.max_pages:
+                raise ValueError(
+                    f"kv_pages={self.n_pages} cannot hold even one slot's "
+                    f"max_pages={self.max_pages}")
+            self.prefill_chunk = prefill_chunk   # None -> whole prompt, one chunk
+            self.allocator = kvcache.PageAllocator(
+                self.n_pages if self._has_kv else 0)
+            # host mirror of the device page table + pages committed to
+            # admitted-but-not-yet-mapped growth (the admission gate)
+            self._page_rows = np.full((n_slots, self.max_pages), -1, np.int32)
+            self._reserved = 0
+            self.cache = kvcache.paged_cache(
+                model, n_slots, page_size=page_size, n_pages=self.n_pages,
+                max_pages=self.max_pages)
+            self._chunk = jax.jit(make_chunk_step(model))
+        else:
+            self.cache = kvcache.batched_cache(model, n_slots, max_seq)
+            self._prefill = jax.jit(
+                lambda p, toks: model.prefill(p, toks, seq_len=max_seq))
+
         self.cache_specs = None
         if mesh is not None:
             from ..dist.sharding import cache_shardings
@@ -87,8 +140,6 @@ class DecodeScheduler:
                 self.cache = jax.device_put(self.cache, shardings)
 
         self._decode = jax.jit(self._step_impl)
-        self._prefill = jax.jit(
-            lambda p, toks: model.prefill(p, toks, seq_len=max_seq))
 
         self.slots: List[Optional[Dict]] = [None] * n_slots
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
@@ -99,10 +150,12 @@ class DecodeScheduler:
         self.out_pos = jnp.zeros((n_slots,), jnp.int32)
         self.pending: List[_Request] = []
         self._active_sessions: set = set()
+        self._chunk_rr = 0            # round-robin over admitting slots
         # -- occupancy / throughput accounting --------------------------------
         self.steps = 0
         self.slot_steps = 0           # sum over steps of active slots
         self.prefill_tokens = 0
+        self.prefill_chunks = 0
         self.decode_tokens = 0
         self.admitted = 0
         self.completed = 0
@@ -111,30 +164,43 @@ class DecodeScheduler:
 
     def submit(self, session: str, request_id: str, prompt, max_new: int) -> None:
         """Enqueue a request; admitted into a free slot as soon as its
-        session has no in-flight predecessor (per-session FIFO gate).
+        session has no in-flight predecessor (per-session FIFO gate) and —
+        in paged mode — the pool's uncommitted pages cover its worst case.
 
         ``max_new`` is clamped to what the slot can hold without silent
         corruption: the output ring caps it at ``max_seq``, and on a
-        full-attention KV ring (no sliding window — detected via
+        full-attention KV layout (no sliding window — detected via
         ``cache_len``) generation past ``max_seq - len(prompt)`` would wrap
-        the ring and evict prompt keys mid-decode, so the budget stops
-        there; a prompt that leaves no decode room at all is rejected
-        outright (clamping would silently drop its leading tokens).
-        Windowed and ring-free (SSM) families wrap by design.
+        the ring / run off the page table, so the budget stops there; a
+        prompt that leaves no decode room at all is rejected outright
+        (clamping would silently drop its leading tokens).  Windowed rings
+        wrap by design; the paged table is linear, so windowed families are
+        bounded by its ``max_pages * page_size`` span instead.  SSM states
+        never bound the budget beyond the output ring.
         """
         prompt = np.asarray(prompt)
+        P = int(prompt.shape[-1])
         limit = self.max_seq
         cache_len = getattr(self.model, "cache_len", None)
-        has_full_ring = (self.model.cfg.family != "ssm"   # SSM: no KV ring
+        has_full_ring = (self._has_kv
                          and cache_len is not None
                          and cache_len(self.max_seq + 1) > self.max_seq)
         if has_full_ring:
-            room = self.max_seq - int(prompt.shape[-1])
+            room = self.max_seq - P
             if room <= 0:
                 raise ValueError(
-                    f"request {request_id!r}: prompt of {int(prompt.shape[-1])} "
+                    f"request {request_id!r}: prompt of {P} "
                     f"tokens leaves no decode room in the max_seq={self.max_seq} "
                     "full-attention ring; size max_seq >= prompt + max_new")
+            limit = min(limit, room)
+        elif self.kv_mode == "paged" and self._has_kv:
+            # windowed attention wraps a ring but cannot wrap the linear
+            # page table: bound the budget by the table's span
+            room = self.max_pages * self.page_size - P
+            if room <= 0:
+                raise ValueError(
+                    f"request {request_id!r}: prompt of {P} tokens overruns "
+                    f"the {self.max_pages}x{self.page_size} page table")
             limit = min(limit, room)
         max_new = max(1, min(max_new, limit))
         self.pending.append(_Request(session, request_id, prompt, max_new))
@@ -146,6 +212,15 @@ class DecodeScheduler:
     def free_slots(self) -> int:
         return sum(1 for s in self.slots if s is None)
 
+    def active_slots(self) -> int:
+        """Slots decoding+sampling this step (admitting slots excluded)."""
+        return sum(1 for s in self.slots
+                   if s is not None and not s.get("admitting"))
+
+    def admitting_slots(self) -> int:
+        return sum(1 for s in self.slots
+                   if s is not None and s.get("admitting"))
+
     def wants_more(self) -> bool:
         """Whether claiming more queued work could improve occupancy.
 
@@ -156,22 +231,42 @@ class DecodeScheduler:
         crash, so over-claiming never loses or reorders work."""
         return self.free_slots() > 0
 
+    def _pages_needed(self, req: _Request) -> int:
+        """Worst-case page count: prompt + all decode writes (the completing
+        step samples its last token from a write at P + max_new - 2)."""
+        if not (self.kv_mode == "paged" and self._has_kv):
+            return 0
+        tokens = int(np.asarray(req.prompt).shape[-1]) + req.max_new - 1
+        return -(-tokens // self.page_size)
+
     def _fill_slots(self) -> None:
         if not self.pending:
             return
         held: List[_Request] = []
+        held_sessions: set = set()    # a held request gates its whole session:
+        # a page-starved r0 must not be overtaken by its session's smaller r1
         for req in self.pending:
             slot = next((i for i, s in enumerate(self.slots) if s is None), None)
             if slot is None:
                 held.append(req)
+                held_sessions.add(req.session)
                 continue
-            if req.session in self._active_sessions:
-                held.append(req)      # FIFO gate: predecessor still decoding
+            if req.session in self._active_sessions or req.session in held_sessions:
+                held.append(req)      # FIFO gate: predecessor decoding or held
+                held_sessions.add(req.session)
                 continue
-            self._admit(slot, req)
+            need = self._pages_needed(req)
+            if need and self.allocator.free_count - self._reserved < need:
+                held.append(req)      # pool gate: uncommitted pages too few
+                held_sessions.add(req.session)
+                continue
+            self._admit(slot, req, need)
         self.pending = held
 
-    def _admit(self, slot: int, req: _Request) -> None:
+    def _admit(self, slot: int, req: _Request, need: int = 0) -> None:
+        if self.kv_mode == "paged":
+            self._admit_paged(slot, req, need)
+            return
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]      # (1, P)
         logits, one = self._prefill(self.params, prompt)
         tok = self._sample(logits[:, -1])                      # (1,)
@@ -188,6 +283,85 @@ class DecodeScheduler:
         self.prefill_tokens += int(prompt.shape[1])
         self.admitted += 1
 
+    def _admit_paged(self, slot: int, req: _Request, need: int) -> None:
+        """Begin a chunked admission: clear the slot's rows (fresh length,
+        recurrent state, unmapped page-table row) and stage the prompt's
+        chunks; one chunk runs per step() until the last lands."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        chunk = self.prefill_chunk or len(prompt)
+        chunks = [prompt[i:i + chunk] for i in range(0, len(prompt), chunk)]
+        self.cache = kvcache.cache_clear_slot(self.cache, slot)
+        self._page_rows[slot, :] = -1
+        self._reserved += need
+        self.slots[slot] = {
+            "req": req,
+            "admitting": True,
+            "chunks": chunks,
+            "chunk_i": 0,
+            "len": 0,                 # host mirror of the slot's live length
+            "pages": [],
+            "need": need,
+            "admitted_step": self.steps,
+        }
+        self._active_sessions.add(req.session)
+
+    def _map_page(self, slot: int, page_idx: int) -> None:
+        """Host-side mapping only — the caller pushes the updated row to the
+        device once per chunk/step (one dispatch per row, not per page)."""
+        pid = self.allocator.alloc(1)[0]
+        self._page_rows[slot, page_idx] = pid
+        st = self.slots[slot]
+        st["pages"].append(pid)
+        self._reserved -= 1
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot's pages and any unused reservation; unmap its device
+        page-table row so residual decode traffic is dropped."""
+        st = self.slots[slot]
+        self.slots[slot] = None
+        if not (self.kv_mode == "paged" and self._has_kv):
+            return
+        self._reserved -= st.get("need", 0) - len(st.get("pages", ()))
+        if st.get("pages"):
+            self.allocator.free(st["pages"])
+        self._page_rows[slot, :] = -1
+        self.cache = kvcache.set_page_row(
+            self.cache, slot, self._page_rows[slot])
+
+    def _run_chunk(self, slot: int) -> None:
+        """One prefill chunk for one admitting slot (alloc-on-write: map the
+        pages the chunk's span touches, then a B=1 forward against the shared
+        pool).  The final chunk's logits seed the slot's first token."""
+        st = self.slots[slot]
+        chunk = st["chunks"][st["chunk_i"]]
+        C = len(chunk)
+        pos0 = st["len"]
+        if self._has_kv:
+            mapped = False
+            for pidx in range(pos0 // self.page_size,
+                              (pos0 + C - 1) // self.page_size + 1):
+                if self._page_rows[slot, pidx] < 0:
+                    self._map_page(slot, pidx)
+                    mapped = True
+            if mapped:
+                self.cache = kvcache.set_page_row(
+                    self.cache, slot, self._page_rows[slot])
+        logits, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(chunk)[None], slot)
+        st["len"] += C
+        st["chunk_i"] += 1
+        self.prefill_tokens += C
+        self.prefill_chunks += 1
+        if st["chunk_i"] == len(st["chunks"]):
+            tok = self._sample(logits[:, -1])
+            self.last_tokens = self.last_tokens.at[slot].set(tok[0])
+            self.out_buf = self.out_buf.at[slot, 0].set(tok[0])
+            self.out_pos = self.out_pos.at[slot].set(1)
+            st["admitting"] = False
+            st["n_out"] = 1
+            del st["chunks"]
+            self.admitted += 1
+
     # -- decode loop ---------------------------------------------------------------
 
     def _sample(self, logits: jnp.ndarray, key=None) -> jnp.ndarray:
@@ -198,27 +372,60 @@ class DecodeScheduler:
         return sampling.temperature_sample(key, logits, self.temperature,
                                            self.top_k)
 
-    def _step_impl(self, params, cache, last_tokens, out_buf, out_pos, key):
-        """Jitted: decode one token per slot, sample, append to the output
-        ring.  Pure device program — nothing returns to the host."""
-        logits, cache = self.model.decode_step(params, cache, last_tokens[:, None])
+    def _step_impl(self, params, cache, last_tokens, out_buf, out_pos, active, key):
+        """Jitted: decode one token per *active* slot, sample, append to the
+        output ring.  Pure device program — nothing returns to the host.
+
+        ``active`` (n_slots,) bool masks freed and mid-admission slots out of
+        the token write, the output-ring advance, and every per-slot cache
+        row: without the mask a stale slot keeps advancing its length and
+        evolving its recurrent state, which corrupts the pool pages (and the
+        admission-in-progress) that position now belongs to.
+        """
+        logits, new_cache = self.model.decode_step(params, cache, last_tokens[:, None])
+        new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
         toks = self._sample(logits[:, -1], key)
+        toks = jnp.where(active, toks, last_tokens)
         b = jnp.arange(self.n_slots, dtype=jnp.int32)
-        out_buf = out_buf.at[b, out_pos % self.max_seq].set(toks)
-        return cache, toks, out_buf, out_pos + 1
+        # inactive rows scatter out of bounds -> dropped
+        col = jnp.where(active, out_pos % self.max_seq, self.max_seq)
+        out_buf = out_buf.at[b, col].set(toks)
+        return new_cache, toks, out_buf, out_pos + active.astype(jnp.int32)
 
     def step(self) -> List[CompletedRequest]:
-        """One batched decode step over the whole slot array; returns the
-        requests that completed this step (their slots are refilled from the
-        pending list before returning)."""
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        """One scheduler tick: at most one prefill chunk (round-robin over
+        admitting slots), then one batched decode step over the active
+        slots; returns the requests that completed this step (their slots
+        are refilled from the pending list before returning)."""
+        self._fill_slots()
+        admitting = [i for i, s in enumerate(self.slots)
+                     if s is not None and s.get("admitting")]
+        if admitting:
+            pick = admitting[self._chunk_rr % len(admitting)]
+            self._chunk_rr += 1
+            self._run_chunk(pick)
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and not s.get("admitting")]
         if not active:
-            self._fill_slots()
             return []
+        if self.kv_mode == "paged" and self._has_kv:
+            # alloc-on-write for decode growth: map the page this step's
+            # token write lands in (within the slot's reservation; the final
+            # step's dangling write past it is dropped by the unmapped table)
+            for i in active:
+                st = self.slots[i]
+                if len(st["pages"]) < st["need"]:
+                    pidx = st["len"] // self.page_size
+                    if pidx < self.max_pages and self._page_rows[i, pidx] < 0:
+                        self._map_page(i, pidx)
+                        self.cache = kvcache.set_page_row(
+                            self.cache, i, self._page_rows[i])
+        mask = np.zeros((self.n_slots,), bool)
+        mask[active] = True
         self._key, sub = jax.random.split(self._key)
         self.cache, self.last_tokens, self.out_buf, self.out_pos = self._decode(
             self.params, self.cache, self.last_tokens, self.out_buf,
-            self.out_pos, sub)
+            self.out_pos, jnp.asarray(mask), sub)
         self.steps += 1
         self.slot_steps += len(active)
         self.decode_tokens += len(active)
@@ -226,13 +433,15 @@ class DecodeScheduler:
         for i in active:
             st = self.slots[i]
             st["n_out"] += 1
+            if self.kv_mode == "paged":
+                st["len"] += 1
             if st["n_out"] >= st["req"].max_new:
                 req = st["req"]
                 finished.append(CompletedRequest(
                     session=req.session, request_id=req.request_id,
                     tokens=np.asarray(self.out_buf[i, : req.max_new]),
                     admitted_step=st["admitted_step"], finished_step=self.steps))
-                self.slots[i] = None
+                self._release_slot(i)
                 self._active_sessions.discard(req.session)
                 self.completed += 1
         if finished:
@@ -241,13 +450,21 @@ class DecodeScheduler:
 
     def reset(self) -> None:
         """Abort all in-flight work (crash recovery: the queue layer
-        redelivers; completed requests are deduped by the frontend)."""
+        redelivers; completed requests are deduped by the frontend).  The
+        pool returns to fully free and every page-table row to unmapped, so
+        a redelivered admission replays from a clean slate."""
         self.slots = [None] * self.n_slots
         self.pending = []
         self._active_sessions.clear()
         self.last_tokens = jnp.zeros((self.n_slots,), jnp.int32)
         self.out_buf = jnp.zeros((self.n_slots, self.max_seq), jnp.int32)
         self.out_pos = jnp.zeros((self.n_slots,), jnp.int32)
+        if self.kv_mode == "paged":
+            self.allocator.reset()
+            self._reserved = 0
+            self._page_rows[:] = -1
+            for slot in range(self.n_slots):
+                self.cache = kvcache.cache_clear_slot(self.cache, slot)
 
     # -- reporting ------------------------------------------------------------------
 
@@ -255,12 +472,40 @@ class DecodeScheduler:
         """Mean active slots per decode step (the batching lever)."""
         return self.slot_steps / self.steps if self.steps else 0.0
 
-    def stats(self) -> Dict[str, float]:
+    def kv_memory_stats(self) -> Dict[str, float]:
+        """KV bytes: allocated pool/ring footprint and the live high-water
+        mark (what the pool actually touched — the paged-vs-ring lever)."""
+        per_token = kvcache.kv_bytes_per_token(self.cache)
+        if self.kv_mode == "paged":
+            return {
+                "kv_bytes_per_token": per_token,
+                "kv_pool_bytes": per_token * self.n_pages * self.page_size,
+                "kv_high_water_bytes":
+                    per_token * self.allocator.high_water * self.page_size,
+                "kv_pages": self.n_pages,
+                "kv_pages_high_water": self.allocator.high_water,
+                "kv_pages_in_use": self.allocator.in_use,
+            }
+        ring_tokens = 0
+        if self._has_kv:
+            cache_len = getattr(self.model, "cache_len", None)
+            ring_tokens = (cache_len(self.max_seq) if cache_len else self.max_seq)
         return {
+            "kv_bytes_per_token": per_token,
+            "kv_pool_bytes": per_token * self.n_slots * ring_tokens,
+            "kv_high_water_bytes": per_token * self.n_slots * ring_tokens,
+        }
+
+    def stats(self) -> Dict[str, float]:
+        out = {
             "steps": self.steps,
             "occupancy": round(self.occupancy(), 3),
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
             "admitted": self.admitted,
             "completed": self.completed,
+            "kv_mode": self.kv_mode,
         }
+        if self.kv_mode == "paged":
+            out["prefill_chunks"] = self.prefill_chunks
+        return out

@@ -42,7 +42,10 @@ def test_staggered_admission_matches_solo_decode(arch):
     P, N = 12, 5
     rng = np.random.default_rng(3)
     prompts = [rng.integers(0, cfg.vocab, size=P).astype(np.int32) for _ in range(3)]
-    ref = {i: np.asarray(generate(model, params, jnp.asarray(p)[None], N))[0]
+    # seq_len sizes the reference's ring for prompt+decode: the legacy
+    # prompt-sized default silently evicts once decode wraps it
+    ref = {i: np.asarray(generate(model, params, jnp.asarray(p)[None], N,
+                                  seq_len=P + N))[0]
            for i, p in enumerate(prompts)}
 
     sched = DecodeScheduler(model, params, n_slots=3, max_seq=P + N)
@@ -69,7 +72,8 @@ def test_overbudget_request_clamped_to_ring_capacity():
     cfg, model, params = tiny()          # dense: full-attention ring
     P, fit = 16, 8
     prompt = np.arange(P, dtype=np.int32) % cfg.vocab
-    ref = np.asarray(generate(model, params, jnp.asarray(prompt)[None], fit))[0]
+    ref = np.asarray(generate(model, params, jnp.asarray(prompt)[None], fit,
+                              seq_len=P + fit))[0]
 
     sched = DecodeScheduler(model, params, n_slots=2, max_seq=P + fit)
     sched.submit("s0", "r0", prompt, max_new=20)   # asks past the ring
@@ -186,7 +190,9 @@ def test_cache_shardings_resolve_on_16x16():
 
     cfg, model, params = tiny("qwen3-14b")
     mesh = AbstractMesh((16, 16), ("data", "model"))
-    sched = DecodeScheduler(model, params, n_slots=16, max_seq=32, mesh=mesh)
+    # ring mode: the paged pool's specs are pinned in test_paged_kvcache
+    sched = DecodeScheduler(model, params, n_slots=16, max_seq=32, mesh=mesh,
+                            kv_mode="ring")
     specs = sched.cache_specs
     # kv rings (L, B, T, H, D): batch on data; the reduced config's 4 kv
     # heads don't divide model=16, so the guard falls back to the time dim
