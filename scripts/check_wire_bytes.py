@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Wire-bytes regression gate over the dry-run matrix.
+
+Every cell of ``artifacts/dryrun_matrix.json`` records
+``collectives.wire_bytes_per_device`` — the bytes a chip puts on the wire
+per step, the cost the sharding registry exists to control.  This gate
+pins each cell against ``artifacts/wire_bytes_baseline.json`` and fails
+when any cell grows past the tolerance (default +10%), so a sharding-rule
+regression (a replicated matrix sneaking into an all-gather, a batch dim
+falling off ``dp``) shows up in CI as a named cell, not as a slow fleet.
+
+Usage:
+  scripts/check_wire_bytes.py [matrix.json] [--baseline B.json]
+                              [--tolerance 0.10] [--update]
+
+``--update`` rewrites the baseline from the given matrix (run it after a
+*deliberate* layout change and commit the diff — the baseline is the
+reviewed record of expected wire traffic).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_MATRIX = ROOT / "artifacts" / "dryrun_matrix.json"
+DEFAULT_BASELINE = ROOT / "artifacts" / "wire_bytes_baseline.json"
+
+
+def cell_key(row: dict) -> str:
+    return f"{row['arch']}|{row['shape']}|{row['mesh']}"
+
+
+def load_wire_bytes(matrix_path: Path) -> dict:
+    rows = json.loads(matrix_path.read_text())
+    out = {}
+    for r in rows:
+        if r.get("status") != "OK":
+            continue
+        wire = (r.get("collectives") or {}).get("wire_bytes_per_device")
+        if wire is not None:
+            out[cell_key(r)] = float(wire)
+    return out
+
+
+def check(matrix_path: Path, baseline_path: Path, tolerance: float) -> int:
+    current = load_wire_bytes(matrix_path)
+    if not baseline_path.exists():
+        print(f"no baseline at {baseline_path}; run with --update to create")
+        return 1
+    baseline = json.loads(baseline_path.read_text())
+    failures, missing = [], []
+    for key, base in sorted(baseline.items()):
+        got = current.get(key)
+        if got is None:
+            missing.append(key)
+        elif got > base * (1.0 + tolerance):
+            failures.append((key, base, got))
+    for key, base, got in failures:
+        print(f"REGRESSION {key}: wire {got:.3e} B/device vs baseline "
+              f"{base:.3e} (+{100 * (got / base - 1):.1f}% > "
+              f"+{100 * tolerance:.0f}% tolerance)")
+    for key in missing:
+        print(f"MISSING {key}: cell in baseline but absent/failed in matrix")
+    improved = sum(1 for k, b in baseline.items()
+                   if k in current and current[k] < b * (1.0 - tolerance))
+    print(f"wire-bytes gate: {len(baseline) - len(failures) - len(missing)}/"
+          f"{len(baseline)} cells within +{100 * tolerance:.0f}% "
+          f"({improved} improved past -{100 * tolerance:.0f}%; "
+          f"re-baseline with --update to bank them)")
+    return 1 if failures or missing else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("matrix", nargs="?", default=str(DEFAULT_MATRIX))
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this matrix")
+    args = ap.parse_args()
+    matrix = Path(args.matrix)
+    baseline = Path(args.baseline)
+    if args.update:
+        wire = load_wire_bytes(matrix)
+        baseline.parent.mkdir(parents=True, exist_ok=True)
+        baseline.write_text(json.dumps(wire, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {len(wire)} cells -> {baseline}")
+        return 0
+    return check(matrix, baseline, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

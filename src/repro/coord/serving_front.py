@@ -35,6 +35,7 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 
 from ..core import FifoQueue, SimCloud
+from ..core.cost import page_blob_op_cost
 from ..core.functions import FunctionRuntime
 from ..core.simcloud import Sleep
 
@@ -89,6 +90,10 @@ class ServingFrontend:
         self.results: Dict[str, List[Any]] = {}
         self.completions: Dict[str, List[str]] = {}
         self._done_ids: set = set()
+        # KV offload storage accounting (continuous flavour, offload=True):
+        # page-blob puts/gets drained from the scheduler and billed here
+        self.offload_storage_usd = 0.0
+        self.offload_storage_ops = 0
 
     def queue_for(self, session: str) -> FifoQueue:
         q = self.queues.get(session)
@@ -165,7 +170,23 @@ class ServingFrontend:
         if self.scheduler is not None:
             out.update(self.scheduler.stats())
             out.update(self.scheduler.kv_memory_stats())
+            if getattr(self.scheduler, "offload", False):
+                out["offload_storage_usd"] = self.offload_storage_usd
+                out["offload_storage_ops"] = self.offload_storage_ops
         return out
+
+    # -- KV offload billing ------------------------------------------------------
+
+    def _bill_offload_ops(self) -> Generator:
+        """Replay the scheduler's page-blob journal against the calibrated
+        object-store latency models and Table-4 S3 op rates.  The blob data
+        itself applied synchronously inside ``step()`` (a blocking S3
+        client); what the cloud sees is the op's wire time and its bill."""
+        for op, _key, kb in self.scheduler.drain_offload_ops():
+            kind = "obj_read" if op == "get" else "obj_write"
+            yield Sleep(self.cloud.sample(kind, kb))
+            self.offload_storage_usd += page_blob_op_cost(op)
+            self.offload_storage_ops += 1
 
     # -- event function: whole-batch flavour ------------------------------------------
 
@@ -226,6 +247,7 @@ class ServingFrontend:
                     billed_prefill = sched.prefill_tokens
                 if active:
                     yield Sleep(self.cloud.sample("decode_step", size_kb=active))
+                yield from self._bill_offload_ops()
                 for fin in finished:
                     self._complete(fin.session, fin.request_id, fin.tokens)
                     yield Sleep(self.cloud.sample("kv_write", size_kb=0.5))
@@ -242,6 +264,7 @@ class ServingFrontend:
                         break
                     claimed.extend(extra)
                     feed(extra)
+            yield from self._bill_offload_ops()   # tail ops of the last step
         except BaseException:
             # crash: the queue redelivers the original batch; hand back the
             # claimed messages and abort in-flight slots — completions

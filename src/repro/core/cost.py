@@ -118,6 +118,23 @@ def cost_savings_factor(requests_per_day: float, read_fraction: float = 0.99,
     return zookeeper_daily_cost(vm, n_vms) / fk
 
 
+# -- KV page offload (storage-backed preemption) -------------------------------
+
+
+def page_blob_op_cost(op: str) -> float:
+    """Per-op cost of a KV page-blob storage operation (Table 4 S3 rates:
+    billed per access regardless of size; deletes are free, as on S3)."""
+    return {"put": W_S3, "get": R_S3, "delete": 0.0}[op]
+
+
+def page_blob_cost(puts: int, gets: int, stored_gb_days: float = 0.0) -> float:
+    """Total storage-side cost of an offload trajectory: op charges plus
+    S3 retention for blob-days actually stored (the pay-as-you-go half of
+    the preemption tradeoff — compute freed now, transfer+storage paid)."""
+    return (puts * W_S3 + gets * R_S3
+            + stored_gb_days * S3_GB_MONTH / 30.0)
+
+
 # -- metered (simulation) accounting ------------------------------------------
 
 

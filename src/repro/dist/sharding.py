@@ -316,6 +316,35 @@ def cache_shardings(cache_abs: PyTree, mesh) -> PyTree:
     return jax.tree_util.tree_map_with_path(assign, cache_abs)
 
 
+def offload_stage_shardings(stage_abs: PyTree, mesh) -> PyTree:
+    """Placement for KV offload staging buffers.
+
+    A staging buffer is a gathered page chunk ``(..., n_chunk_pages,
+    page_size, H, D)`` in flight between the shared pool and host memory
+    (``kvcache.gather_pages`` / ``scatter_pages``).  Unlike the resident
+    pool, the chunk is about to cross the device boundary, so the only
+    useful partitioning is the one that matches the pool's head sharding —
+    each shard DMAs its own heads and no reshuffle happens before the
+    transfer.  Heads go on ``model`` when they divide; everything else
+    (including the gathered-page dim — chunks are a handful of pages, far
+    too small to amortize a collective) stays replicated.
+    """
+    rules = MeshRules.for_mesh(mesh)
+
+    def assign(path, leaf):
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        entries: list = [None] * nd
+        if keys and keys[-1] in _CACHE_POOL_KEYS and nd >= 4:
+            h = nd - 2                      # (..., n, ps, H, D) head dim
+            if shape[h] % _axes_size(rules.model, mesh) == 0:
+                entries[h] = rules.model
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(assign, stage_abs)
+
+
 # ---------------------------------------------------------------------------
 # Activation policy
 # ---------------------------------------------------------------------------

@@ -52,29 +52,90 @@ def _whole_batch_model_fn(model, params, max_new: int):
     return model_fn
 
 
+def validate_pool_sizing(*, batch_size: int, prompt_len: int, max_new: int,
+                         page_size: int, kv_pages: int = None,
+                         prefill_chunk: int = None,
+                         offload: bool = False) -> int:
+    """Fail fast — at startup, with the arithmetic spelled out — instead of
+    letting an undersized pool stall the first admission mid-run.
+
+    Without offload the pool must fit **one max-size admission plus one
+    active decode batch**: the largest request this workload can submit
+    reserves ``ceil((prompt_len + max_new - 1) / page_size)`` pages up front
+    (the reservation gate), and while it chunks in, every other slot must
+    still be able to map its next decode page — one more page per remaining
+    slot.  With ``offload`` the preemption policy converts pool pressure
+    into bounded preempt/restore cycles, so the floor relaxes to the one
+    hard requirement: the largest single admission must fit on its own
+    (even evicting every other slot cannot conjure more pages than the
+    pool holds).  Returns the minimum page count so callers can echo it.
+    """
+    if page_size < 1:
+        raise ValueError(f"--page-size must be >= 1, got {page_size}")
+    if prefill_chunk is not None and prefill_chunk < 1:
+        raise ValueError(f"--prefill-chunk must be >= 1, got {prefill_chunk}")
+    admission_pages = -(-(prompt_len + max_new - 1) // page_size)
+    min_pages = (admission_pages if offload
+                 else admission_pages + (batch_size - 1))
+    if kv_pages is not None and kv_pages < min_pages:
+        if offload:
+            raise ValueError(
+                f"--kv-pages {kv_pages} cannot fit even one max-size "
+                f"admission: a {prompt_len}-token prompt with {max_new} "
+                f"decode tokens reserves "
+                f"ceil(({prompt_len}+{max_new}-1)/{page_size}) = "
+                f"{admission_pages} pages, and preempting every other slot "
+                f"cannot make the pool larger than it is.  Raise --kv-pages, "
+                f"shrink --prompt-len/--max-new, or grow --page-size.")
+        raise ValueError(
+            f"--kv-pages {kv_pages} cannot fit one max-size admission plus "
+            f"one active decode batch: a {prompt_len}-token prompt with "
+            f"{max_new} decode tokens reserves "
+            f"ceil(({prompt_len}+{max_new}-1)/{page_size}) = "
+            f"{admission_pages} pages, and the other {batch_size - 1} slots "
+            f"need one decode page each -> minimum {min_pages} pages.  "
+            f"Raise --kv-pages, shrink --prompt-len/--max-new, grow "
+            f"--page-size, reduce --batch-size, or enable --offload (which "
+            f"turns pool pressure into bounded preempt/restore cycles); "
+            f"otherwise the first oversized request stalls in the pending "
+            f"queue forever.")
+    return min_pages
+
+
 def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    batch_size: int, max_new: int, prompt_len: int,
                    temperature: float = 0.0, top_k: int = 0,
                    mesh=None, kv_mode: str = "paged", page_size: int = 16,
                    prefill_chunk: int = None,
-                   kv_pages: int = None) -> ServingFrontend:
+                   kv_pages: int = None, offload: bool = False,
+                   preempt_policy: str = None,
+                   idle_preempt_steps: int = 0) -> ServingFrontend:
     """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
 
     ``continuous`` falls back to the shared whole-batch flavour for families
     without a per-slot decode path (enc-dec).  ``kv_mode='paged'`` (default)
     serves from the shared paged-block KV pool with chunked prefill;
     ``'ring'`` keeps the per-slot ring + monolithic-prefill baseline.
+    ``offload`` enables storage-backed preemption (paged mode only).
     """
     if mode not in ("continuous", "shared", "per-session"):
         raise ValueError(f"unknown serving mode {mode!r}")
     if mode == "continuous" and supports_continuous(cfg):
+        if kv_mode == "paged" and cfg.family != "ssm":
+            validate_pool_sizing(batch_size=batch_size, prompt_len=prompt_len,
+                                 max_new=max_new, page_size=page_size,
+                                 kv_pages=kv_pages,
+                                 prefill_chunk=prefill_chunk,
+                                 offload=offload)
         sched = DecodeScheduler(model, params, n_slots=batch_size,
                                 max_seq=prompt_len + max_new,
                                 temperature=temperature, top_k=top_k,
                                 mesh=mesh, kv_mode=kv_mode,
                                 page_size=page_size,
                                 prefill_chunk=prefill_chunk,
-                                kv_pages=kv_pages)
+                                kv_pages=kv_pages, offload=offload,
+                                preempt_policy=preempt_policy,
+                                idle_preempt_steps=idle_preempt_steps)
         return ServingFrontend(cloud, scheduler=sched, batch_size=batch_size)
     if temperature or top_k:
         raise ValueError(
@@ -119,7 +180,9 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 mode: str = "continuous", temperature: float = 0.0,
                 top_k: int = 0, seed: int = 0, quiet: bool = False,
                 kv_mode: str = "paged", page_size: int = 16,
-                prefill_chunk: int = None, kv_pages: int = None):
+                prefill_chunk: int = None, kv_pages: int = None,
+                offload: bool = False, preempt_policy: str = None,
+                idle_preempt_steps: int = 0):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -130,7 +193,9 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                               prompt_len=prompt_len, temperature=temperature,
                               top_k=top_k, kv_mode=kv_mode,
                               page_size=page_size,
-                              prefill_chunk=prefill_chunk, kv_pages=kv_pages)
+                              prefill_chunk=prefill_chunk, kv_pages=kv_pages,
+                              offload=offload, preempt_policy=preempt_policy,
+                              idle_preempt_steps=idle_preempt_steps)
     t0 = time.time()
     spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
                    sessions=sessions, prompt_len=prompt_len, max_new=max_new)
@@ -161,6 +226,13 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                       f"pages high-water ({s['kv_high_water_bytes']/1024:.1f} "
                       f"of {s['kv_pool_bytes']/1024:.1f} KiB), "
                       f"{s['prefill_chunks']} prefill chunks")
+            if "offload_bytes" in s:
+                print(f"kv offload: {s['preemptions']} preemptions / "
+                      f"{s['restores']} restores, "
+                      f"{s['offload_bytes']/1024:.1f} KiB offloaded + "
+                      f"{s['restore_bytes']/1024:.1f} KiB restored "
+                      f"({s['offload_puts']} puts / {s['offload_gets']} gets, "
+                      f"storage ${s.get('offload_storage_usd', 0.0):.6f})")
     return frontend
 
 
@@ -185,13 +257,25 @@ def main() -> None:
                     help="admission chunk size in tokens (default: whole prompt)")
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="pool size in pages (default: slots x max_pages)")
+    ap.add_argument("--offload", action="store_true",
+                    help="storage-backed preemption: evict a victim slot's "
+                         "KV pages to the object store under pool pressure "
+                         "and restore them chunked (paged mode only)")
+    ap.add_argument("--preempt-policy", default=None,
+                    choices=["none", "pressure"],
+                    help="victim policy (default: pressure when --offload)")
+    ap.add_argument("--idle-preempt-steps", type=int, default=0,
+                    help="minimum steps a slot must be resident before it "
+                         "is preemptible (anti-thrash floor)")
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
                 sessions=args.sessions, batch_size=args.batch_size,
                 prompt_len=args.prompt_len, mode=args.mode,
                 temperature=args.temperature, top_k=args.top_k,
                 kv_mode=args.kv_mode, page_size=args.page_size,
-                prefill_chunk=args.prefill_chunk, kv_pages=args.kv_pages)
+                prefill_chunk=args.prefill_chunk, kv_pages=args.kv_pages,
+                offload=args.offload, preempt_policy=args.preempt_policy,
+                idle_preempt_steps=args.idle_preempt_steps)
 
 
 if __name__ == "__main__":

@@ -353,6 +353,89 @@ def set_page_row(batch_cache: Dict, slot: int, row) -> Dict:
     return jax.tree_util.tree_map_with_path(upd, batch_cache)
 
 
+# ---------------------------------------------------------------------------
+# Page-level offload: extract / inject pool pages (storage-backed preemption)
+# ---------------------------------------------------------------------------
+
+# Axis of the page dim in a pool leaf (..., n_pages, page_size, Hkv, D).
+_PAGE_AXIS = -4
+
+
+def gather_pages(cache: Dict, page_ids) -> Dict:
+    """Extract physical pages ``page_ids`` from every pool leaf.
+
+    Returns a pytree with the cache's structure restricted to pool leaves:
+    each ``kp``/``vp`` leaf becomes ``(..., len(page_ids), page_size, Hkv,
+    D)`` — the staging buffer a preemption ships to the object store.  The
+    caller supplies ``page_ids`` in *logical* order (the slot's page-table
+    order), so a blob is position-ordered regardless of how scrambled the
+    physical table is.  Exact inverse of :func:`scatter_pages` through any
+    page table: ``gather(scatter(cache, ids, blob), ids) == blob``.
+    """
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def pick(path, leaf):
+        if _path_keys(path)[-1] in POOL_KEYS:
+            return jnp.take(leaf, ids, axis=_PAGE_AXIS)
+        return None
+
+    tree = jax.tree_util.tree_map_with_path(pick, cache)
+    return _prune_none(tree)
+
+
+def scatter_pages(cache: Dict, page_ids, blob: Dict) -> Dict:
+    """Inject a page blob back into the pool at physical pages ``page_ids``
+    (the restore half of offload; the new ids need not match the ids the
+    blob was extracted from — the page table re-maps them).  Non-pool leaves
+    pass through untouched."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    flat = dict(_iter_pool_leaves(blob))
+
+    def put(path, leaf):
+        keys = _path_keys(path)
+        if keys[-1] not in POOL_KEYS:
+            return leaf
+        src = flat[keys]
+        idx = [slice(None)] * leaf.ndim
+        idx[leaf.ndim + _PAGE_AXIS] = ids
+        return leaf.at[tuple(idx)].set(src.astype(leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(put, cache)
+
+
+def slice_page_blob(blob: Dict, lo: int, hi: int) -> Dict:
+    """Pages ``[lo, hi)`` of a blob — the unit of a chunked restore."""
+    def cut(leaf):
+        idx = [slice(None)] * leaf.ndim
+        idx[leaf.ndim + _PAGE_AXIS] = slice(lo, hi)
+        return leaf[tuple(idx)]
+
+    return jax.tree_util.tree_map(cut, blob)
+
+
+def blob_nbytes(blob: Dict) -> int:
+    """Serialized size of a page blob (drives the storage billing)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(blob))
+
+
+def _iter_pool_leaves(tree, prefix: Tuple[str, ...] = ()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_pool_leaves(v, prefix + (str(k),))
+    elif tree is not None:
+        yield prefix, tree
+
+
+def _prune_none(tree):
+    """Drop None-valued subtrees (non-pool leaves filtered by gather)."""
+    if isinstance(tree, dict):
+        out = {k: _prune_none(v) for k, v in tree.items()}
+        return {k: v for k, v in out.items()
+                if v is not None and not (isinstance(v, dict) and not v)}
+    return tree
+
+
 def kv_bytes_per_token(cache: Dict) -> int:
     """Bytes of KV state per stored token, summed over layers (ring k/v or
     pool kp/vp leaves; recurrent state excluded — it is O(1) per slot)."""

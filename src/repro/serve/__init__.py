@@ -1,6 +1,9 @@
-from .engine import make_decode_step, make_prefill
+from .engine import make_decode_step, make_offload_steps, make_prefill
+from .lifecycle import IllegalTransition, Slot, SlotState
 from .sampling import greedy, temperature_sample
 from .scheduler import CompletedRequest, DecodeScheduler, supports_continuous
 
-__all__ = ["make_decode_step", "make_prefill", "greedy", "temperature_sample",
-           "CompletedRequest", "DecodeScheduler", "supports_continuous"]
+__all__ = ["make_decode_step", "make_offload_steps", "make_prefill",
+           "greedy", "temperature_sample", "IllegalTransition", "Slot",
+           "SlotState", "CompletedRequest", "DecodeScheduler",
+           "supports_continuous"]

@@ -42,6 +42,25 @@ def make_chunk_step(model) -> Callable:
     return chunk_step
 
 
+def make_offload_steps() -> tuple:
+    """Jitted staging steps for storage-backed preemption.
+
+    ``extract(cache, page_ids)`` gathers the victim's pool pages (in the
+    page table's logical order) into the staging buffer the scheduler ships
+    to the object store; ``inject(cache, page_ids, blob)`` scatters a blob
+    chunk back onto freshly allocated pages during a chunked restore.  Both
+    are pure pool-pytree programs (:func:`repro.models.kvcache.gather_pages`
+    / :func:`scatter_pages`) jitted once and re-traced only per distinct
+    chunk length, so a restore step costs one dispatch — same budget as a
+    prefill chunk.
+    """
+    from ..models import kvcache
+
+    extract = jax.jit(kvcache.gather_pages)
+    inject = jax.jit(kvcache.scatter_pages)
+    return extract, inject
+
+
 def make_prefill(model, seq_len: int = None) -> Callable:
     """``seq_len`` sizes the cache for the *total* sequence (prompt + decode
     budget): without it the legacy prompt-sized ring silently evicts the

@@ -2,7 +2,12 @@
 
 A fixed-width decode batch (``n_slots``) steps one token per active slot per
 call; free slots are re-admitted from a shared cross-session queue of pending
-requests.  Two KV layouts:
+requests.  Every slot runs the explicit lifecycle in
+:mod:`repro.serve.lifecycle`::
+
+    EMPTY -> ADMITTING -> ACTIVE -> (PREEMPTED -> RESTORING -> ACTIVE)* -> DRAINED
+
+Two KV layouts:
 
 * ``kv_mode='paged'`` (default): one shared ``(n_pages, page_size, Hkv, D)``
   pool per layer plus a per-slot page table
@@ -13,34 +18,55 @@ requests.  Two KV layouts:
   prompt is split into ``prefill_chunk``-sized pieces and one chunk runs per
   :meth:`step` call (a B=1 forward against the shared pool, interleaved with
   the batch's decode step), so a long-prompt admission never stalls the
-  other slots for more than one chunk.  A slot carries an ``admitting``
-  state until its last chunk lands and only then joins sampling.  Admission
-  is reservation-gated: a request is only admitted when the pool's
-  uncommitted pages cover its worst case, so lazy mapping can never deadlock
-  mid-decode.
+  other slots for more than one chunk.  Admission is reservation-gated: a
+  request is only admitted when the pool's uncommitted pages cover its worst
+  case, so lazy mapping can never deadlock mid-decode.
 
-* ``kv_mode='ring'``: the PR 2 baseline — per-slot rings sized
-  ``max_seq`` and monolithic prefill-on-admit
-  (``prefill(..., seq_len=max_seq)`` scattered in via ``cache_insert_slot``).
+* ``kv_mode='ring'``: the PR 2 baseline — per-slot rings sized ``max_seq``
+  and monolithic prefill-on-admit.
 
-Either way the batched decode step masks non-active slots out of the token
+**Storage-backed preemption** (``offload=True``, paged mode): the FaaSKeeper
+move — durable state belongs in cloud storage, compute is ephemeral and
+reclaimable — applied to the KV pool.  When a pending request is pool-gated
+(an admission stall), the preemption policy picks victim slots among the
+ACTIVE ones (oldest resident first — the idleness signal — then most pages
+pinned; ``idle_preempt_steps`` sets the minimum residency so fresh slots are
+never thrashed), extracts each victim's pages through its page table into a
+position-ordered blob (:func:`kvcache.gather_pages`), PUTs it to the
+:class:`repro.core.storage.PageBlobStore`, and frees the pages *and* the
+victim's whole reservation back to the pool.  The victim parks in PREEMPTED:
+its slot row (recurrent state, lengths, output ring) stays frozen under the
+decode mask, but it pins zero pool capacity.  When pool pressure clears (no
+pending request is pool-gated and the uncommitted margin covers the
+victim's worst case again), the slot funds a restore: the blob is fetched
+and injected **chunk by chunk, interleaved with decode exactly like prefill
+chunks** (:func:`kvcache.scatter_pages` onto freshly allocated pages, the
+page table re-mapped), and the slot resumes ACTIVE — token-for-token
+identical to a never-preempted run, because the gather/scatter pair is an
+exact inverse through the page table and the masked rows never advanced.
+Restores are FIFO in preemption order and, once funded, run to completion
+(RESTORING slots are never re-preempted), so offload cannot deadlock or
+livelock the pool.  Storage traffic is journaled on the blob store and
+billed by the serving frontend under the calibrated object-store models.
+
+Either way the batched decode step masks non-ACTIVE slots out of the token
 write, the output ring advance, and every per-slot cache row
-(``kvcache.mask_slot_rows``): a freed or mid-admission slot's stale state
-cannot advance, and its dangling pool writes are dropped by the unmapped
-page table.
+(``kvcache.mask_slot_rows``): a freed, mid-admission, or preempted slot's
+stale state cannot advance, and its dangling pool writes are dropped by the
+unmapped page table.
 
 Per-session FIFO is preserved structurally: a session's next request is only
 admitted after its predecessor completes (the ``_active_sessions`` gate), and
 the pending list is scanned in arrival order.
 
 ``mesh`` applies :func:`repro.dist.sharding.cache_shardings` to the live
-decode cache: on a concrete mesh the cache is ``device_put`` onto the
-resolved shardings (the 16x16 decode path); on an abstract mesh the resolved
-specs are recorded in ``cache_specs`` for inspection/lowering.
+decode cache; with offload enabled the staging-buffer specs resolve through
+:func:`repro.dist.sharding.offload_stage_shardings` into ``stage_specs``.
 
 Supported families: ``dense``, ``moe``, ``ssm``, ``hybrid`` (decoder-only
 LMs; the enc-dec families keep the whole-batch serving path).  SSM keeps its
-ring-free O(1) state — no pool, but admission still chunks.
+ring-free O(1) state — no pool, so nothing to offload, but admission still
+chunks.
 """
 
 from __future__ import annotations
@@ -52,11 +78,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.storage import PageBlobStore
 from ..models import kvcache
 from . import sampling
-from .engine import make_chunk_step
+from .engine import make_chunk_step, make_offload_steps
+from .lifecycle import Slot, SlotState
 
 CONTINUOUS_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+PREEMPT_POLICIES = ("none", "pressure")
 
 
 def supports_continuous(cfg) -> bool:
@@ -69,6 +99,7 @@ class _Request:
     request_id: str
     prompt: Any                 # (P,) int tokens
     max_new: int
+    submit_step: int = 0
 
 
 @dataclasses.dataclass
@@ -78,6 +109,8 @@ class CompletedRequest:
     tokens: np.ndarray          # (max_new,) generated tokens
     admitted_step: int
     finished_step: int
+    submitted_step: int = 0     # admission stall = admitted - submitted
+    preempts: int = 0           # times this request was preempted mid-decode
 
 
 class DecodeScheduler:
@@ -87,13 +120,25 @@ class DecodeScheduler:
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  mesh=None, kv_mode: str = "paged", page_size: int = 16,
                  kv_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 offload: bool = False,
+                 preempt_policy: Optional[str] = None,
+                 idle_preempt_steps: int = 0,
+                 blob_store: Optional[PageBlobStore] = None):
         if not supports_continuous(model.cfg):
             raise ValueError(
                 f"family {model.cfg.family!r} has no per-slot decode path; "
                 f"continuous batching supports {CONTINUOUS_FAMILIES}")
         if kv_mode not in ("paged", "ring"):
             raise ValueError(f"kv_mode must be 'paged' or 'ring', got {kv_mode!r}")
+        if preempt_policy is None:
+            preempt_policy = "pressure" if offload else "none"
+        if preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"preempt_policy must be one of {PREEMPT_POLICIES}, "
+                             f"got {preempt_policy!r}")
+        if offload and kv_mode != "paged":
+            raise ValueError("KV offload needs the paged pool (kv_mode='paged'); "
+                             "per-slot rings have no page granularity to evict")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -103,6 +148,9 @@ class DecodeScheduler:
         self.kv_mode = kv_mode
         self._key = jax.random.key(seed)
         self._has_kv = model.cfg.family != "ssm"   # SSM state is ring-free
+        self.offload = bool(offload) and kv_mode == "paged" and self._has_kv
+        self.preempt_policy = preempt_policy if self.offload else "none"
+        self.idle_preempt_steps = idle_preempt_steps
 
         if kv_mode == "paged":
             self.page_size = page_size
@@ -129,19 +177,41 @@ class DecodeScheduler:
             self._prefill = jax.jit(
                 lambda p, toks: model.prefill(p, toks, seq_len=max_seq))
 
+        # -- offload plumbing ------------------------------------------------
+        self.blob_store = blob_store if blob_store is not None else PageBlobStore()
+        self._extract, self._inject = make_offload_steps()
+        # restore chunking mirrors prefill chunking: a restore step moves
+        # about one prefill chunk's worth of tokens (>= 1 page)
+        self._restore_chunk_pages = (
+            max(1, self.prefill_chunk // self.page_size)
+            if kv_mode == "paged" and self.prefill_chunk else None)
+        self._preempted_order: List[int] = []   # slot indices, FIFO restores
+        self.preemptions = 0
+        self.restores = 0
+        self.restore_chunks = 0
+        self.offload_pages = 0
+        self.restored_pages = 0
+
         self.cache_specs = None
+        self.stage_specs = None
         if mesh is not None:
-            from ..dist.sharding import cache_shardings
+            from ..dist.sharding import cache_shardings, offload_stage_shardings
 
             shardings = cache_shardings(self.cache, mesh)
             self.cache_specs = jax.tree_util.tree_map(
                 lambda s: s.spec, shardings)
+            if self.offload:
+                stage = jax.eval_shape(
+                    lambda c: kvcache.gather_pages(c, jnp.zeros((1,), jnp.int32)),
+                    self.cache)
+                self.stage_specs = jax.tree_util.tree_map(
+                    lambda s: s.spec, offload_stage_shardings(stage, mesh))
             if isinstance(mesh, jax.sharding.Mesh):   # concrete: place the cache
                 self.cache = jax.device_put(self.cache, shardings)
 
         self._decode = jax.jit(self._step_impl)
 
-        self.slots: List[Optional[Dict]] = [None] * n_slots
+        self.slots: List[Slot] = [Slot(index=i) for i in range(n_slots)]
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
         # device-side per-slot output ring: tokens accumulate on device and
         # are pulled to host once per *completion*, not once per step — a
@@ -151,9 +221,11 @@ class DecodeScheduler:
         self.pending: List[_Request] = []
         self._active_sessions: set = set()
         self._chunk_rr = 0            # round-robin over admitting slots
+        self._restore_rr = 0          # round-robin over restoring slots
         # -- occupancy / throughput accounting --------------------------------
         self.steps = 0
         self.slot_steps = 0           # sum over steps of active slots
+        self.page_step_sum = 0        # sum over steps of pages in use
         self.prefill_tokens = 0
         self.prefill_chunks = 0
         self.decode_tokens = 0
@@ -165,7 +237,8 @@ class DecodeScheduler:
     def submit(self, session: str, request_id: str, prompt, max_new: int) -> None:
         """Enqueue a request; admitted into a free slot as soon as its
         session has no in-flight predecessor (per-session FIFO gate) and —
-        in paged mode — the pool's uncommitted pages cover its worst case.
+        in paged mode — the pool's uncommitted pages cover its worst case
+        (or the preemption policy can evict enough to make them).
 
         ``max_new`` is clamped to what the slot can hold without silent
         corruption: the output ring caps it at ``max_seq``, and on a
@@ -203,23 +276,26 @@ class DecodeScheduler:
                     f"the {self.max_pages}x{self.page_size} page table")
             limit = min(limit, room)
         max_new = max(1, min(max_new, limit))
-        self.pending.append(_Request(session, request_id, prompt, max_new))
+        self.pending.append(_Request(session, request_id, prompt, max_new,
+                                     submit_step=self.steps))
         self._fill_slots()
 
     def busy(self) -> bool:
-        return any(s is not None for s in self.slots) or bool(self.pending)
+        return any(s.occupied for s in self.slots) or bool(self.pending)
 
     def free_slots(self) -> int:
-        return sum(1 for s in self.slots if s is None)
+        return sum(1 for s in self.slots if s.empty)
 
     def active_slots(self) -> int:
-        """Slots decoding+sampling this step (admitting slots excluded)."""
-        return sum(1 for s in self.slots
-                   if s is not None and not s.get("admitting"))
+        """Slots decoding+sampling this step (admitting/preempted excluded)."""
+        return sum(1 for s in self.slots if s.decoding)
 
     def admitting_slots(self) -> int:
+        return sum(1 for s in self.slots if s.state is SlotState.ADMITTING)
+
+    def preempted_slots(self) -> int:
         return sum(1 for s in self.slots
-                   if s is not None and s.get("admitting"))
+                   if s.state in (SlotState.PREEMPTED, SlotState.RESTORING))
 
     def wants_more(self) -> bool:
         """Whether claiming more queued work could improve occupancy.
@@ -239,14 +315,17 @@ class DecodeScheduler:
         tokens = int(np.asarray(req.prompt).shape[-1]) + req.max_new - 1
         return -(-tokens // self.page_size)
 
+    def _uncommitted(self) -> int:
+        """Pool pages not yet promised to anyone (the admission currency)."""
+        return self.allocator.free_count - self._reserved
+
     def _fill_slots(self) -> None:
-        if not self.pending:
-            return
         held: List[_Request] = []
         held_sessions: set = set()    # a held request gates its whole session:
         # a page-starved r0 must not be overtaken by its session's smaller r1
+        pool_starved = False
         for req in self.pending:
-            slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+            slot = next((s for s in self.slots if s.empty), None)
             if slot is None:
                 held.append(req)
                 held_sessions.add(req.session)
@@ -256,110 +335,227 @@ class DecodeScheduler:
                 held_sessions.add(req.session)
                 continue
             need = self._pages_needed(req)
-            if need and self.allocator.free_count - self._reserved < need:
-                held.append(req)      # pool gate: uncommitted pages too few
-                held_sessions.add(req.session)
-                continue
+            if need and self._uncommitted() < need:
+                # pool gate: try the preemption policy before holding
+                if not self._preempt_for(need):
+                    pool_starved = True
+                    held.append(req)
+                    held_sessions.add(req.session)
+                    continue
             self._admit(slot, req, need)
         self.pending = held
+        # restores only start when pool pressure has cleared: no pending
+        # request is pool-gated, and the uncommitted margin funds the
+        # victim's whole worst case (prevents preempt<->restore thrash)
+        if not pool_starved:
+            self._start_restores()
 
-    def _admit(self, slot: int, req: _Request, need: int = 0) -> None:
+    def _admit(self, slot: Slot, req: _Request, need: int = 0) -> None:
         if self.kv_mode == "paged":
             self._admit_paged(slot, req, need)
             return
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]      # (1, P)
         logits, one = self._prefill(self.params, prompt)
         tok = self._sample(logits[:, -1])                      # (1,)
-        self.cache = kvcache.cache_insert_slot(self.cache, one, slot)
-        self.last_tokens = self.last_tokens.at[slot].set(tok[0])
-        self.out_buf = self.out_buf.at[slot, 0].set(tok[0])
-        self.out_pos = self.out_pos.at[slot].set(1)
-        self.slots[slot] = {
-            "req": req,
-            "n_out": 1,
-            "admitted_step": self.steps,
-        }
+        self.cache = kvcache.cache_insert_slot(self.cache, one, slot.index)
+        self.last_tokens = self.last_tokens.at[slot.index].set(tok[0])
+        self.out_buf = self.out_buf.at[slot.index, 0].set(tok[0])
+        self.out_pos = self.out_pos.at[slot.index].set(1)
+        slot.to(SlotState.ADMITTING).to(SlotState.ACTIVE)  # monolithic prefill
+        slot.req = req
+        slot.n_out = 1
+        slot.admitted_step = self.steps
+        slot.submitted_step = req.submit_step
+        slot.active_since = self.steps
         self._active_sessions.add(req.session)
         self.prefill_tokens += int(prompt.shape[1])
         self.admitted += 1
 
-    def _admit_paged(self, slot: int, req: _Request, need: int) -> None:
+    def _admit_paged(self, slot: Slot, req: _Request, need: int) -> None:
         """Begin a chunked admission: clear the slot's rows (fresh length,
         recurrent state, unmapped page-table row) and stage the prompt's
         chunks; one chunk runs per step() until the last lands."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         chunk = self.prefill_chunk or len(prompt)
         chunks = [prompt[i:i + chunk] for i in range(0, len(prompt), chunk)]
-        self.cache = kvcache.cache_clear_slot(self.cache, slot)
-        self._page_rows[slot, :] = -1
+        self.cache = kvcache.cache_clear_slot(self.cache, slot.index)
+        self._page_rows[slot.index, :] = -1
         self._reserved += need
-        self.slots[slot] = {
-            "req": req,
-            "admitting": True,
-            "chunks": chunks,
-            "chunk_i": 0,
-            "len": 0,                 # host mirror of the slot's live length
-            "pages": [],
-            "need": need,
-            "admitted_step": self.steps,
-        }
+        slot.to(SlotState.ADMITTING)
+        slot.req = req
+        slot.chunks = chunks
+        slot.chunk_i = 0
+        slot.len = 0                  # host mirror of the slot's live length
+        slot.pages = []
+        slot.need = need
+        slot.admitted_step = self.steps
+        slot.submitted_step = req.submit_step
         self._active_sessions.add(req.session)
 
-    def _map_page(self, slot: int, page_idx: int) -> None:
+    def _map_page(self, slot: Slot, page_idx: int) -> None:
         """Host-side mapping only — the caller pushes the updated row to the
         device once per chunk/step (one dispatch per row, not per page)."""
         pid = self.allocator.alloc(1)[0]
-        self._page_rows[slot, page_idx] = pid
-        st = self.slots[slot]
-        st["pages"].append(pid)
+        self._page_rows[slot.index, page_idx] = pid
+        slot.pages.append(pid)
         self._reserved -= 1
 
-    def _release_slot(self, slot: int) -> None:
-        """Free a slot's pages and any unused reservation; unmap its device
-        page-table row so residual decode traffic is dropped."""
-        st = self.slots[slot]
-        self.slots[slot] = None
+    def _release_slot(self, slot: Slot) -> None:
+        """Free a DRAINED slot's pages and any unused reservation; unmap its
+        device page-table row so residual decode traffic is dropped."""
+        slot.to(SlotState.EMPTY)
         if not (self.kv_mode == "paged" and self._has_kv):
+            self.slots[slot.index] = Slot(index=slot.index)
             return
-        self._reserved -= st.get("need", 0) - len(st.get("pages", ()))
-        if st.get("pages"):
-            self.allocator.free(st["pages"])
-        self._page_rows[slot, :] = -1
+        self._reserved -= slot.need - len(slot.pages)
+        if slot.pages:
+            self.allocator.free(slot.pages)
+        self._page_rows[slot.index, :] = -1
         self.cache = kvcache.set_page_row(
-            self.cache, slot, self._page_rows[slot])
+            self.cache, slot.index, self._page_rows[slot.index])
+        self.slots[slot.index] = Slot(index=slot.index)
 
-    def _run_chunk(self, slot: int) -> None:
+    # -- preemption / restore (storage-backed slot reclamation) -----------------
+
+    def _preempt_for(self, need: int) -> bool:
+        """Free at least ``need - uncommitted`` pages by preempting ACTIVE
+        victims; all-or-nothing (a partial eviction would pay the offload
+        transfer without unblocking the admission)."""
+        if self.preempt_policy != "pressure":
+            return False
+        deficit = need - self._uncommitted()
+        victims = [s for s in self.slots
+                   if s.state is SlotState.ACTIVE and s.pages
+                   and s.age(self.steps) >= self.idle_preempt_steps]
+        # idleness-driven ranking: the longest-resident slot first (the
+        # mostly-idle long-runner), then the one pinning the most pages
+        victims.sort(key=lambda s: (s.age(self.steps), len(s.pages)),
+                     reverse=True)
+        chosen, freed = [], 0
+        for v in victims:
+            if freed >= deficit:
+                break
+            chosen.append(v)
+            freed += v.need   # eviction releases pages AND reservation
+        if freed < deficit:
+            return False
+        for v in chosen:
+            self._preempt(v)
+        return True
+
+    def preempt(self, index: int) -> None:
+        """Preempt one ACTIVE slot now (the policy calls this; exposed so
+        tests and drivers can force a preemption point)."""
+        self._preempt(self.slots[index])
+
+    def _preempt(self, slot: Slot) -> None:
+        slot.to(SlotState.PREEMPTED)
+        row = self._page_rows[slot.index]
+        pidx = [i for i in range(self.max_pages) if row[i] >= 0]
+        phys = [int(row[i]) for i in pidx]
+        # extract in logical order and stage to host: the blob is position-
+        # ordered no matter how scrambled the physical table was
+        blob = jax.device_get(
+            self._extract(self.cache, jnp.asarray(phys, jnp.int32)))
+        nbytes = kvcache.blob_nbytes(blob)
+        key = f"kv/{slot.req.request_id}/p{slot.preempts}"
+        self.blob_store.put(key, blob, nbytes)
+        slot.blob_key = key
+        slot.blob_pidx = pidx
+        slot.restore_i = 0
+        slot.preempts += 1
+        # release the slot's whole pool commitment: mapped pages back to the
+        # free list, unmapped growth back to the uncommitted margin
+        self._reserved -= slot.need - len(slot.pages)
+        self.allocator.free(slot.pages)
+        slot.pages = []
+        self._page_rows[slot.index, :] = -1
+        self.cache = kvcache.set_page_row(
+            self.cache, slot.index, self._page_rows[slot.index])
+        self._preempted_order.append(slot.index)
+        self.preemptions += 1
+        self.offload_pages += len(phys)
+
+    def _start_restores(self) -> None:
+        """Fund restores FIFO in preemption order: a later blob must not
+        overtake an earlier one (its session would see out-of-order work)."""
+        for idx in list(self._preempted_order):
+            slot = self.slots[idx]
+            if self._uncommitted() < slot.need:
+                break
+            slot.to(SlotState.RESTORING)
+            self._reserved += slot.need
+            slot.blob = self.blob_store.get(slot.blob_key)
+            self._preempted_order.remove(idx)
+            self.restores += 1
+
+    def _run_restore_chunk(self, slot: Slot) -> None:
+        """Inject one chunk of a restoring slot's blob: allocate fresh
+        physical pages, scatter the blob slice into them, re-map the page
+        table.  The final chunk reactivates the slot — it rejoins the decode
+        batch the same step, like an admission whose last chunk landed."""
+        n = len(slot.blob_pidx)
+        hi = min(slot.restore_i + (self._restore_chunk_pages or n), n)
+        phys = []
+        for j in range(slot.restore_i, hi):
+            pid = self.allocator.alloc(1)[0]
+            self._reserved -= 1
+            slot.pages.append(pid)
+            self._page_rows[slot.index, slot.blob_pidx[j]] = pid
+            phys.append(pid)
+        piece = kvcache.slice_page_blob(slot.blob, slot.restore_i, hi)
+        self.cache = self._inject(self.cache, jnp.asarray(phys, jnp.int32),
+                                  piece)
+        self.cache = kvcache.set_page_row(
+            self.cache, slot.index, self._page_rows[slot.index])
+        self.restored_pages += hi - slot.restore_i
+        slot.restore_i = hi
+        self.restore_chunks += 1
+        if hi == n:
+            self.blob_store.delete(slot.blob_key)
+            slot.blob = None
+            slot.blob_key = None
+            slot.blob_pidx = []
+            slot.to(SlotState.ACTIVE)
+            slot.active_since = self.steps
+
+    def drain_offload_ops(self) -> list:
+        """Storage ops since the last drain — the frontend bills these under
+        the calibrated obj_read/obj_write latency + Table-4 cost models."""
+        return self.blob_store.drain_ops()
+
+    def _run_chunk(self, slot: Slot) -> None:
         """One prefill chunk for one admitting slot (alloc-on-write: map the
         pages the chunk's span touches, then a B=1 forward against the shared
         pool).  The final chunk's logits seed the slot's first token."""
-        st = self.slots[slot]
-        chunk = st["chunks"][st["chunk_i"]]
+        chunk = slot.chunks[slot.chunk_i]
         C = len(chunk)
-        pos0 = st["len"]
+        pos0 = slot.len
         if self._has_kv:
             mapped = False
             for pidx in range(pos0 // self.page_size,
                               (pos0 + C - 1) // self.page_size + 1):
-                if self._page_rows[slot, pidx] < 0:
+                if self._page_rows[slot.index, pidx] < 0:
                     self._map_page(slot, pidx)
                     mapped = True
             if mapped:
                 self.cache = kvcache.set_page_row(
-                    self.cache, slot, self._page_rows[slot])
+                    self.cache, slot.index, self._page_rows[slot.index])
         logits, self.cache = self._chunk(
-            self.params, self.cache, jnp.asarray(chunk)[None], slot)
-        st["len"] += C
-        st["chunk_i"] += 1
+            self.params, self.cache, jnp.asarray(chunk)[None], slot.index)
+        slot.len += C
+        slot.chunk_i += 1
         self.prefill_tokens += C
         self.prefill_chunks += 1
-        if st["chunk_i"] == len(st["chunks"]):
+        if slot.chunk_i == len(slot.chunks):
             tok = self._sample(logits[:, -1])
-            self.last_tokens = self.last_tokens.at[slot].set(tok[0])
-            self.out_buf = self.out_buf.at[slot, 0].set(tok[0])
-            self.out_pos = self.out_pos.at[slot].set(1)
-            st["admitting"] = False
-            st["n_out"] = 1
-            del st["chunks"]
+            self.last_tokens = self.last_tokens.at[slot.index].set(tok[0])
+            self.out_buf = self.out_buf.at[slot.index, 0].set(tok[0])
+            self.out_pos = self.out_pos.at[slot.index].set(1)
+            slot.to(SlotState.ACTIVE)
+            slot.active_since = self.steps
+            slot.n_out = 1
+            slot.chunks = None
             self.admitted += 1
 
     # -- decode loop ---------------------------------------------------------------
@@ -376,11 +572,11 @@ class DecodeScheduler:
         """Jitted: decode one token per *active* slot, sample, append to the
         output ring.  Pure device program — nothing returns to the host.
 
-        ``active`` (n_slots,) bool masks freed and mid-admission slots out of
-        the token write, the output-ring advance, and every per-slot cache
-        row: without the mask a stale slot keeps advancing its length and
-        evolving its recurrent state, which corrupts the pool pages (and the
-        admission-in-progress) that position now belongs to.
+        ``active`` (n_slots,) bool masks freed, mid-admission, and preempted
+        slots out of the token write, the output-ring advance, and every
+        per-slot cache row: without the mask a stale slot keeps advancing its
+        length and evolving its recurrent state, which corrupts the pool
+        pages (and the admission-in-progress) that position now belongs to.
         """
         logits, new_cache = self.model.decode_step(params, cache, last_tokens[:, None])
         new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
@@ -394,18 +590,22 @@ class DecodeScheduler:
 
     def step(self) -> List[CompletedRequest]:
         """One scheduler tick: at most one prefill chunk (round-robin over
-        admitting slots), then one batched decode step over the active
-        slots; returns the requests that completed this step (their slots
-        are refilled from the pending list before returning)."""
+        admitting slots) and one restore chunk (round-robin over restoring
+        slots), then one batched decode step over the active slots; returns
+        the requests that completed this step (their slots are refilled from
+        the pending list before returning)."""
         self._fill_slots()
-        admitting = [i for i, s in enumerate(self.slots)
-                     if s is not None and s.get("admitting")]
+        admitting = [s for s in self.slots if s.state is SlotState.ADMITTING]
         if admitting:
             pick = admitting[self._chunk_rr % len(admitting)]
             self._chunk_rr += 1
             self._run_chunk(pick)
-        active = [i for i, s in enumerate(self.slots)
-                  if s is not None and not s.get("admitting")]
+        restoring = [s for s in self.slots if s.state is SlotState.RESTORING]
+        if restoring:
+            pick = restoring[self._restore_rr % len(restoring)]
+            self._restore_rr += 1
+            self._run_restore_chunk(pick)
+        active = [s.index for s in self.slots if s.decoding]
         if not active:
             return []
         if self.kv_mode == "paged" and self._has_kv:
@@ -414,10 +614,10 @@ class DecodeScheduler:
             # step's dangling write past it is dropped by the unmapped table)
             for i in active:
                 st = self.slots[i]
-                if len(st["pages"]) < st["need"]:
-                    pidx = st["len"] // self.page_size
+                if len(st.pages) < st.need:
+                    pidx = st.len // self.page_size
                     if pidx < self.max_pages and self._page_rows[i, pidx] < 0:
-                        self._map_page(i, pidx)
+                        self._map_page(st, pidx)
                         self.cache = kvcache.set_page_row(
                             self.cache, i, self._page_rows[i])
         mask = np.zeros((self.n_slots,), bool)
@@ -429,19 +629,23 @@ class DecodeScheduler:
         self.steps += 1
         self.slot_steps += len(active)
         self.decode_tokens += len(active)
+        if self.kv_mode == "paged" and self._has_kv:
+            self.page_step_sum += self.allocator.in_use
         finished: List[CompletedRequest] = []
         for i in active:
             st = self.slots[i]
-            st["n_out"] += 1
+            st.n_out += 1
             if self.kv_mode == "paged":
-                st["len"] += 1
-            if st["n_out"] >= st["req"].max_new:
-                req = st["req"]
+                st.len += 1
+            if st.n_out >= st.req.max_new:
+                req = st.req
+                st.to(SlotState.DRAINED)
                 finished.append(CompletedRequest(
                     session=req.session, request_id=req.request_id,
                     tokens=np.asarray(self.out_buf[i, : req.max_new]),
-                    admitted_step=st["admitted_step"], finished_step=self.steps))
-                self._release_slot(i)
+                    admitted_step=st.admitted_step, finished_step=self.steps,
+                    submitted_step=st.submitted_step, preempts=st.preempts))
+                self._release_slot(st)
                 self._active_sessions.discard(req.session)
                 self.completed += 1
         if finished:
@@ -451,14 +655,17 @@ class DecodeScheduler:
     def reset(self) -> None:
         """Abort all in-flight work (crash recovery: the queue layer
         redelivers; completed requests are deduped by the frontend).  The
-        pool returns to fully free and every page-table row to unmapped, so
-        a redelivered admission replays from a clean slate."""
-        self.slots = [None] * self.n_slots
+        pool returns to fully free, every page-table row to unmapped, and
+        the blob store is emptied — a redelivered admission replays from its
+        prompt, never from an orphaned blob."""
+        self.slots = [s.force_empty() for s in self.slots]
         self.pending = []
         self._active_sessions.clear()
+        self._preempted_order = []
         self.last_tokens = jnp.zeros((self.n_slots,), jnp.int32)
         self.out_buf = jnp.zeros((self.n_slots, self.max_seq), jnp.int32)
         self.out_pos = jnp.zeros((self.n_slots,), jnp.int32)
+        self.blob_store.clear()
         if self.kv_mode == "paged":
             self.allocator.reset()
             self._reserved = 0
@@ -471,6 +678,13 @@ class DecodeScheduler:
     def occupancy(self) -> float:
         """Mean active slots per decode step (the batching lever)."""
         return self.slot_steps / self.steps if self.steps else 0.0
+
+    def pool_occupancy(self) -> float:
+        """Mean fraction of the pool in use per decode step."""
+        if not (self.kv_mode == "paged" and self._has_kv and self.steps
+                and self.n_pages):
+            return 0.0
+        return self.page_step_sum / (self.steps * self.n_pages)
 
     def kv_memory_stats(self) -> Dict[str, float]:
         """KV bytes: allocated pool/ring footprint and the live high-water
@@ -485,6 +699,7 @@ class DecodeScheduler:
                 "kv_pages": self.n_pages,
                 "kv_pages_high_water": self.allocator.high_water,
                 "kv_pages_in_use": self.allocator.in_use,
+                "kv_pool_occupancy": round(self.pool_occupancy(), 3),
             }
         ring_tokens = 0
         if self._has_kv:
@@ -494,6 +709,25 @@ class DecodeScheduler:
             "kv_bytes_per_token": per_token,
             "kv_pool_bytes": per_token * self.n_slots * ring_tokens,
             "kv_high_water_bytes": per_token * self.n_slots * ring_tokens,
+        }
+
+    def offload_stats(self) -> Dict[str, float]:
+        """Offload traffic gauges: preempt/restore counts, page counts, and
+        the byte flows to/from the blob store (bytes_out = offloaded,
+        bytes_in = restored)."""
+        bs = self.blob_store
+        return {
+            "preemptions": self.preemptions,
+            "restores": self.restores,
+            "restore_chunks": self.restore_chunks,
+            "offload_pages": self.offload_pages,
+            "restored_pages": self.restored_pages,
+            "offload_puts": bs.puts,
+            "offload_gets": bs.gets,
+            "offload_bytes": bs.bytes_out,
+            "restore_bytes": bs.bytes_in,
+            "offload_stored_bytes": bs.bytes_stored,
+            "offload_stored_high_water_bytes": bs.high_water_bytes,
         }
 
     def stats(self) -> Dict[str, float]:
@@ -508,4 +742,6 @@ class DecodeScheduler:
         }
         if self.kv_mode == "paged":
             out["prefill_chunks"] = self.prefill_chunks
+        if self.offload:
+            out.update(self.offload_stats())
         return out

@@ -14,6 +14,7 @@ import repro.dist  # noqa: F401  (installs the AbstractMesh compat shim)
 from repro import configs
 from repro.models import build_model, kvcache
 from repro.serve.engine import generate
+from repro.serve.lifecycle import SlotState
 from repro.serve.scheduler import DecodeScheduler
 
 PARITY_ARCHS = ["minicpm-2b", "moonshot-v1-16b-a3b", "recurrentgemma-2b"]
@@ -233,7 +234,7 @@ def test_reset_mid_admission_replays_exactly():
     sched.step()                       # chunk 1 of 4 lands
     sched.step()                       # chunk 2 of 4 lands
     st = sched.slots[0]
-    assert st is not None and st["admitting"] and st["chunk_i"] == 2
+    assert st.state is SlotState.ADMITTING and st.chunk_i == 2
     assert sched.admitted == 0, "half-prefilled slot reached sampling"
     assert sched.allocator.in_use > 0
 
@@ -293,7 +294,7 @@ def test_admission_waits_for_pool_pages():
     p = np.zeros(P, np.int32)
     sched.submit("a", "r0", p, N)
     sched.submit("b", "r1", p, N)
-    assert sched.slots[0] is not None and sched.slots[1] is None
+    assert sched.slots[0].occupied and sched.slots[1].empty
     assert [r.request_id for r in sched.pending] == ["r1"]
     got = run_all(sched, {})
     assert sorted(got) == [0, 1]
@@ -310,7 +311,7 @@ def test_page_starved_request_not_overtaken_by_its_session():
     sched.submit("x", "r0", np.zeros(16, np.int32), 8)   # takes 6 pages
     sched.submit("y", "r1", np.zeros(16, np.int32), 8)   # starved: needs 6
     sched.submit("y", "r2", np.zeros(4, np.int32), 2)    # fits, but gated by r1
-    assert sched.slots[1] is None
+    assert sched.slots[1].empty
     assert [r.request_id for r in sched.pending] == ["r1", "r2"]
     order = []
     while sched.busy():

@@ -93,7 +93,7 @@ def test_overbudget_request_clamped_to_ring_capacity():
     _, m2, p2 = tiny("mamba2-1.3b")
     s2 = DecodeScheduler(m2, p2, n_slots=2, max_seq=12)
     s2.submit("s0", "r0", np.zeros(8, np.int32), max_new=999)
-    assert s2.slots[0]["req"].max_new == 12
+    assert s2.slots[0].req.max_new == 12
 
 
 def test_sampling_flags_rejected_on_greedy_fallback():
@@ -113,8 +113,8 @@ def test_session_fifo_gate_and_slot_reuse():
     sched.submit("s0", "a0", p, 3)
     sched.submit("s0", "a1", p, 3)   # same session: must wait for a0
     sched.submit("s1", "b0", p, 3)
-    assert sched.slots[0]["req"].request_id == "a0"
-    assert sched.slots[1]["req"].request_id == "b0"
+    assert sched.slots[0].req.request_id == "a0"
+    assert sched.slots[1].req.request_id == "b0"
     assert [r.request_id for r in sched.pending] == ["a1"]
     order = []
     while sched.busy():

@@ -56,6 +56,30 @@ def test_dryrun_matrix_artifact_complete():
         (r["arch"], r["shape"], r.get("error")) for r in rows if r not in ok]
 
 
+def test_wire_bytes_regression_gate():
+    """Every committed matrix cell's wire_bytes_per_device must stay within
+    tolerance of the committed baseline — a sharding-rule regression fails
+    tier-1 as a named cell (the gate also runs in CI via
+    scripts/check_wire_bytes.py on the rebuilt matrix)."""
+    matrix = ROOT / "artifacts" / "dryrun_matrix.json"
+    baseline = ROOT / "artifacts" / "wire_bytes_baseline.json"
+    if not matrix.exists() or not baseline.exists():
+        pytest.skip("matrix/baseline not built (scripts/run_matrices.sh, "
+                    "scripts/check_wire_bytes.py --update)")
+    r = _run([sys.executable, "scripts/check_wire_bytes.py", str(matrix),
+              "--baseline", str(baseline)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    import json
+    rows = json.loads(matrix.read_text())
+    base = json.loads(baseline.read_text())
+    assert f"{len(base)}/{len(base)} cells within" in r.stdout, r.stdout
+    # the baseline must cover the whole matrix (new cells get baselined, not
+    # silently ungated)
+    assert len(base) == len(rows), (
+        f"baseline covers {len(base)} of {len(rows)} cells; run "
+        "scripts/check_wire_bytes.py --update and commit the diff")
+
+
 def test_serving_driver():
     from repro.launch.serve import run_serving
 
