@@ -35,7 +35,7 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 
 from ..core import FifoQueue, SimCloud
-from ..core.cost import page_blob_op_cost
+from ..core.cost import page_blob_op_cost, page_blob_retention_cost
 from ..core.functions import FunctionRuntime
 from ..core.simcloud import Sleep
 
@@ -94,6 +94,10 @@ class ServingFrontend:
         # page-blob puts/gets drained from the scheduler and billed here
         self.offload_storage_usd = 0.0
         self.offload_storage_ops = 0
+        # parked-session retention: blob bytes held between requests accrue
+        # S3 GB-time at Table-4 rates (the other side of the re-prefill trade)
+        self.park_storage_usd = 0.0
+        self._retention_billed_at = cloud.now
 
     def queue_for(self, session: str) -> FifoQueue:
         q = self.queues.get(session)
@@ -170,9 +174,18 @@ class ServingFrontend:
         if self.scheduler is not None:
             out.update(self.scheduler.stats())
             out.update(self.scheduler.kv_memory_stats())
-            if getattr(self.scheduler, "offload", False):
+            sharing = (getattr(self.scheduler, "prefix_sharing", False)
+                       or getattr(self.scheduler, "park_sessions", False))
+            if getattr(self.scheduler, "offload", False) or sharing:
+                # blob op spend covers preemption *and* parking traffic —
+                # they share the store and the billing path
                 out["offload_storage_usd"] = self.offload_storage_usd
                 out["offload_storage_ops"] = self.offload_storage_ops
+            if sharing:
+                # the other side of the retention trade: the S3 GB-time for
+                # keeping parked state durable between requests sits next to
+                # shared_prefix_tokens (the prefill compute it avoided)
+                out["park_storage_usd"] = self.park_storage_usd
         return out
 
     # -- KV offload billing ------------------------------------------------------
@@ -181,7 +194,16 @@ class ServingFrontend:
         """Replay the scheduler's page-blob journal against the calibrated
         object-store latency models and Table-4 S3 op rates.  The blob data
         itself applied synchronously inside ``step()`` (a blocking S3
-        client); what the cloud sees is the op's wire time and its bill."""
+        client); what the cloud sees is the op's wire time and its bill.
+        Parked/offloaded blob bytes additionally accrue S3 retention over
+        simulated time — the storage side of the parking-vs-re-prefill
+        trade."""
+        now = self.cloud.now
+        stored = self.scheduler.blob_store.bytes_stored
+        if stored and now > self._retention_billed_at:
+            self.park_storage_usd += page_blob_retention_cost(
+                stored * (now - self._retention_billed_at))
+        self._retention_billed_at = now
         for op, _key, kb in self.scheduler.drain_offload_ops():
             kind = "obj_read" if op == "get" else "obj_write"
             yield Sleep(self.cloud.sample(kind, kb))

@@ -135,6 +135,16 @@ def page_blob_cost(puts: int, gets: int, stored_gb_days: float = 0.0) -> float:
             + stored_gb_days * S3_GB_MONTH / 30.0)
 
 
+def page_blob_retention_cost(byte_seconds: float) -> float:
+    """S3 retention for a byte-seconds integral (Table 4 GB-month rate).
+
+    This is the parked-session trade: retaining an offloaded session's KV
+    blob costs ``bytes * seconds`` of storage; dropping it costs the next
+    request a full re-prefill.  At Table-4 rates retention is ~1e-13
+    USD/KB-s, so parking wins whenever the session returns within hours."""
+    return page_blob_cost(0, 0, stored_gb_days=byte_seconds / 1e9 / 86400.0)
+
+
 # -- metered (simulation) accounting ------------------------------------------
 
 

@@ -273,6 +273,10 @@ def cache_shardings(cache_abs: PyTree, mesh) -> PyTree:
     table indexes one shared pool, so the pool stays *replicated over dp*
     and shards heads on model (falling back to the page dim for GQA archs);
     page tables (..., n_slots, max_pages) follow the slot batch onto dp.
+    Refcounted prefix sharing / session parking never changes pool
+    placement: a shared page is just extra table rows pointing at it, and a
+    copy-on-write split lands on another page of the same pool — heads stay
+    on ``model`` throughout (pinned by the prefix-sharing spec test).
     SSM states shard their head dim, conv tails and RG-LRU states their
     channel dim.
     """

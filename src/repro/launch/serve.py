@@ -109,14 +109,20 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    prefill_chunk: int = None,
                    kv_pages: int = None, offload: bool = False,
                    preempt_policy: str = None,
-                   idle_preempt_steps: int = 0) -> ServingFrontend:
+                   idle_preempt_steps: int = 0,
+                   prefix_sharing: bool = False,
+                   park_sessions: bool = False,
+                   park_ttl_steps: int = 0) -> ServingFrontend:
     """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
 
     ``continuous`` falls back to the shared whole-batch flavour for families
     without a per-slot decode path (enc-dec).  ``kv_mode='paged'`` (default)
     serves from the shared paged-block KV pool with chunked prefill;
     ``'ring'`` keeps the per-slot ring + monolithic-prefill baseline.
-    ``offload`` enables storage-backed preemption (paged mode only).
+    ``offload`` enables storage-backed preemption; ``prefix_sharing`` maps
+    indexed prompt prefixes read-only with copy-on-write splits;
+    ``park_sessions`` retains a completed session's KV across requests
+    (``park_ttl_steps`` bounds the retention window; paged mode only).
     """
     if mode not in ("continuous", "shared", "per-session"):
         raise ValueError(f"unknown serving mode {mode!r}")
@@ -135,7 +141,10 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                                 prefill_chunk=prefill_chunk,
                                 kv_pages=kv_pages, offload=offload,
                                 preempt_policy=preempt_policy,
-                                idle_preempt_steps=idle_preempt_steps)
+                                idle_preempt_steps=idle_preempt_steps,
+                                prefix_sharing=prefix_sharing,
+                                park_sessions=park_sessions,
+                                park_ttl_steps=park_ttl_steps)
         return ServingFrontend(cloud, scheduler=sched, batch_size=batch_size)
     if temperature or top_k:
         raise ValueError(
@@ -182,7 +191,9 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 kv_mode: str = "paged", page_size: int = 16,
                 prefill_chunk: int = None, kv_pages: int = None,
                 offload: bool = False, preempt_policy: str = None,
-                idle_preempt_steps: int = 0):
+                idle_preempt_steps: int = 0,
+                prefix_sharing: bool = False, park_sessions: bool = False,
+                park_ttl_steps: int = 0):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -195,7 +206,10 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                               page_size=page_size,
                               prefill_chunk=prefill_chunk, kv_pages=kv_pages,
                               offload=offload, preempt_policy=preempt_policy,
-                              idle_preempt_steps=idle_preempt_steps)
+                              idle_preempt_steps=idle_preempt_steps,
+                              prefix_sharing=prefix_sharing,
+                              park_sessions=park_sessions,
+                              park_ttl_steps=park_ttl_steps)
     t0 = time.time()
     spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
                    sessions=sessions, prompt_len=prompt_len, max_new=max_new)
@@ -233,6 +247,13 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                       f"{s['restore_bytes']/1024:.1f} KiB restored "
                       f"({s['offload_puts']} puts / {s['offload_gets']} gets, "
                       f"storage ${s.get('offload_storage_usd', 0.0):.6f})")
+            if "shared_prefix_tokens" in s:
+                print(f"prefix sharing: {s['shared_prefix_tokens']} prompt "
+                      f"tokens served from resident pages "
+                      f"({s['park_hits']} park hits / {s['index_hits']} index "
+                      f"hits, {s['cow_splits']} CoW splits, "
+                      f"{s['parked_sessions']} sessions parked, retention "
+                      f"${s.get('park_storage_usd', 0.0):.9f})")
     return frontend
 
 
@@ -267,6 +288,17 @@ def main() -> None:
     ap.add_argument("--idle-preempt-steps", type=int, default=0,
                     help="minimum steps a slot must be resident before it "
                          "is preemptible (anti-thrash floor)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="map indexed prompt prefixes read-only from the "
+                         "refcounted page pool and prefill only the tail "
+                         "(copy-on-write on shared-page writes; paged only)")
+    ap.add_argument("--park-sessions", action="store_true",
+                    help="retain a completed session's KV pages across "
+                         "requests so its next request restores instead of "
+                         "re-prefilling (paged only)")
+    ap.add_argument("--park-ttl-steps", type=int, default=0,
+                    help="drop a parked session after this many scheduler "
+                         "steps (0 = retain until evicted or reset)")
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
                 sessions=args.sessions, batch_size=args.batch_size,
@@ -275,7 +307,10 @@ def main() -> None:
                 kv_mode=args.kv_mode, page_size=args.page_size,
                 prefill_chunk=args.prefill_chunk, kv_pages=args.kv_pages,
                 offload=args.offload, preempt_policy=args.preempt_policy,
-                idle_preempt_steps=args.idle_preempt_steps)
+                idle_preempt_steps=args.idle_preempt_steps,
+                prefix_sharing=args.prefix_sharing,
+                park_sessions=args.park_sessions,
+                park_ttl_steps=args.park_ttl_steps)
 
 
 if __name__ == "__main__":

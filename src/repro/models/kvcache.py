@@ -38,10 +38,12 @@ the property the paged parity suite pins.
 
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .layers import COMPUTE_DTYPE
 
@@ -182,18 +184,26 @@ def _paged_kv_view(layer_cache: Dict, upto) -> Tuple[jnp.ndarray, ...]:
 
 
 class PageAllocator:
-    """Free-list allocator for the paged pool.
+    """Refcounted free-list allocator for the paged pool.
 
     Pure host-side bookkeeping: the device only ever sees the page table.
-    Invariant (pinned by the property tests): ``free_count + in_use ==
-    n_pages`` at every point, no page is ever handed out twice, and
-    :meth:`reset` returns the pool to fully free.
+    Pages are a *shared* resource: :meth:`alloc` hands a page out with
+    refcount 1, :meth:`share` takes an additional reference (a second slot
+    mapping the page read-only, the prefix index publishing it, a parked
+    session retaining it), and :meth:`release` drops one reference — the
+    page only returns to the free list when its last reference dies.
+
+    Invariants (pinned by the property tests and the scheduler's
+    ``audit()``): ``free_count + in_use == n_pages`` at every point, every
+    in-use page has refcount >= 1, no free page carries a refcount, no page
+    is ever handed out twice, and :meth:`reset` returns the pool to fully
+    free.
     """
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop() -> 0 first
-        self._mapped: set = set()
+        self._rc: Dict[int, int] = {}       # page -> reference count (mapped only)
         self.high_water = 0
 
     @property
@@ -202,7 +212,16 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._mapped)
+        return len(self._rc)
+
+    @property
+    def total_refs(self) -> int:
+        """Sum of refcounts over mapped pages (== total mappings held by
+        slots + prefix index + parked sessions; the audit cross-checks)."""
+        return sum(self._rc.values())
+
+    def refcount(self, page: int) -> int:
+        return self._rc.get(page, 0)
 
     def alloc(self, n: int = 1) -> List[int]:
         if n > len(self._free):
@@ -210,23 +229,155 @@ class PageAllocator:
                 f"KV pool exhausted: need {n} pages, {len(self._free)} free "
                 f"of {self.n_pages}")
         pages = [self._free.pop() for _ in range(n)]
-        self._mapped.update(pages)
-        self.high_water = max(self.high_water, len(self._mapped))
+        for p in pages:
+            self._rc[p] = 1
+        self.high_water = max(self.high_water, len(self._rc))
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Take one extra reference on each (already mapped) page."""
         for p in pages:
-            if p not in self._mapped:
-                raise ValueError(f"freeing unmapped page {p}")
-            self._mapped.remove(p)
-            self._free.append(p)
+            if p not in self._rc:
+                raise ValueError(f"sharing unmapped page {p}")
+            self._rc[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; a page with no references left goes
+        back to the free list."""
+        for p in pages:
+            rc = self._rc.get(p)
+            if rc is None:
+                raise ValueError(f"releasing unmapped page {p}")
+            if rc == 1:
+                del self._rc[p]
+                self._free.append(p)
+            else:
+                self._rc[p] = rc - 1
+
+    # Back-compat name: before refcounts, completion-time frees called this.
+    free = release
+
+    def check(self) -> None:
+        """Raise if the allocator invariants do not hold."""
+        if len(self._free) + len(self._rc) != self.n_pages:
+            raise AssertionError(
+                f"page leak: {len(self._free)} free + {len(self._rc)} mapped "
+                f"!= {self.n_pages}")
+        if any(rc < 1 for rc in self._rc.values()):
+            raise AssertionError(f"mapped page with refcount < 1: {self._rc}")
+        overlap = set(self._free) & set(self._rc)
+        if overlap:
+            raise AssertionError(f"pages both free and mapped: {overlap}")
 
     def reset(self) -> None:
         """Back to fully free; the high-water gauge restarts too, so
         post-crash stats describe the replayed run, not the aborted one."""
         self._free = list(range(self.n_pages - 1, -1, -1))
-        self._mapped.clear()
+        self._rc.clear()
         self.high_water = 0
+
+
+# ---------------------------------------------------------------------------
+# Prefix index: content-addressed full pages for cross-request sharing
+# ---------------------------------------------------------------------------
+
+
+def page_hashes(tokens, page_size: int) -> List[bytes]:
+    """Chain hashes of the *full* pages of a token sequence.
+
+    ``h_i = H(h_{i-1} || tokens[i*ps : (i+1)*ps])`` — keyed on the whole
+    token prefix, not the page content alone, so two sequences share a chain
+    entry iff they agree on every token up to that page boundary.  Only full
+    pages get a hash: a partial page's content is still growing and cannot
+    be content-addressed.
+    """
+    arr = np.asarray(tokens, np.int32).reshape(-1)
+    out: List[bytes] = []
+    h = b"\x00" * 16
+    for i in range(len(arr) // page_size):
+        m = hashlib.blake2b(digest_size=16)
+        m.update(h)
+        m.update(arr[i * page_size:(i + 1) * page_size].tobytes())
+        h = m.digest()
+        out.append(h)
+    return out
+
+
+class PrefixIndex:
+    """Content-addressed map from token-chain hashes to resident pool pages.
+
+    The FaaSKeeper/FaaSFS move applied to KV state: a full page whose tokens
+    are fixed is an immutable journal entry, so it can be shared read-only by
+    any request whose prompt carries the same token prefix.  The index holds
+    **one allocator reference per published page** (taken via
+    :meth:`PageAllocator.share` at publish time), which is what keeps a page
+    alive after the slot that wrote it completes.  Pages are immutable once
+    published: appends only ever write at ``pos >= length``, and a writer
+    that must touch a shared page first copy-on-write splits it.
+
+    Eviction is LRU over publish/hit order and only reclaims the *index's*
+    reference — a page another slot or parked session still maps survives
+    with its remaining refcount.
+    """
+
+    def __init__(self):
+        self._pages: Dict[bytes, int] = {}       # chain hash -> physical page
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    @property
+    def pages(self) -> List[int]:
+        return list(self._pages.values())
+
+    def publish(self, hashes: Sequence[bytes], page_ids: Sequence[int],
+                allocator: PageAllocator) -> int:
+        """Publish (hash, page) pairs not already indexed; the index takes
+        one reference per page it actually adopts.  Returns how many."""
+        n = 0
+        for h, pid in zip(hashes, page_ids):
+            if h in self._pages:
+                continue
+            allocator.share([pid])
+            self._pages[h] = int(pid)
+            n += 1
+        return n
+
+    def lookup(self, hashes: Sequence[bytes]) -> List[int]:
+        """Longest indexed chain prefix: physical pages for ``hashes[:k]``
+        where ``k`` is the first miss.  Hits are re-marked most recent."""
+        out: List[int] = []
+        for h in hashes:
+            pid = self._pages.get(h)
+            if pid is None:
+                break
+            self._pages[h] = self._pages.pop(h)   # LRU bump
+            out.append(pid)
+        return out
+
+    def evict(self, allocator: PageAllocator, need_free: int,
+              pinned: Sequence[int] = ()) -> int:
+        """Drop LRU entries (releasing the index's reference) until the
+        allocator has ``need_free`` free pages or every unpinned entry is
+        gone.  ``pinned`` pages are skipped — the admission driving the
+        eviction may be about to map them.  Returns the number dropped."""
+        keep = set(pinned)
+        n = 0
+        for h in list(self._pages):               # LRU first
+            if allocator.free_count >= need_free:
+                break
+            pid = self._pages[h]
+            if pid in keep:
+                continue
+            allocator.release([self._pages.pop(h)])
+            n += 1
+        return n
+
+    def clear(self, allocator: Optional[PageAllocator] = None) -> None:
+        if allocator is not None:
+            for pid in self._pages.values():
+                allocator.release([pid])
+        self._pages.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +550,59 @@ def scatter_pages(cache: Dict, page_ids, blob: Dict) -> Dict:
         idx = [slice(None)] * leaf.ndim
         idx[leaf.ndim + _PAGE_AXIS] = ids
         return leaf.at[tuple(idx)].set(src.astype(leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(put, cache)
+
+
+def copy_pages(cache: Dict, src_ids, dst_ids) -> Dict:
+    """Copy pool pages ``src_ids`` onto ``dst_ids`` (the copy-on-write
+    split: a writer about to mutate a page with refcount > 1 duplicates it
+    onto a fresh page and remaps its own table; every other reference keeps
+    reading the original bytes).  Non-pool leaves pass through untouched."""
+    src = jnp.asarray(src_ids, jnp.int32)
+    dst = jnp.asarray(dst_ids, jnp.int32)
+
+    def cp(path, leaf):
+        if _path_keys(path)[-1] not in POOL_KEYS:
+            return leaf
+        vals = jnp.take(leaf, src, axis=_PAGE_AXIS)
+        idx = [slice(None)] * leaf.ndim
+        idx[leaf.ndim + _PAGE_AXIS] = dst
+        return leaf.at[tuple(idx)].set(vals)
+
+    return jax.tree_util.tree_map_with_path(cp, cache)
+
+
+def gather_slot_state(cache: Dict, slot) -> Dict:
+    """Snapshot one slot's per-slot rows (lengths, recurrent conv/SSM/RG-LRU
+    state — everything except the shared pool and the page table, which the
+    scheduler mirrors on the host).  The snapshot is what a parked session
+    carries after its slot is reclaimed; :func:`scatter_slot_state` is the
+    exact inverse into any slot index."""
+
+    def pick(path, leaf):
+        keys = _path_keys(path)
+        if keys[-1] in POOL_KEYS or keys[-1] == "page_table":
+            return None
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1,
+                                            axis=_slot_axis_of(keys))
+
+    return _prune_none(jax.tree_util.tree_map_with_path(pick, cache))
+
+
+def scatter_slot_state(cache: Dict, slot, state: Dict) -> Dict:
+    """Install a :func:`gather_slot_state` snapshot into row ``slot`` (the
+    restore half of parked-slot eviction; the target slot need not be the
+    one the snapshot came from).  Pool and page-table leaves pass through."""
+    flat = dict(_iter_pool_leaves(state))
+
+    def put(path, leaf):
+        keys = _path_keys(path)
+        src = flat.get(keys)
+        if src is None:
+            return leaf
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, src.astype(leaf.dtype), slot, axis=_slot_axis_of(keys))
 
     return jax.tree_util.tree_map_with_path(put, cache)
 

@@ -7,9 +7,11 @@ in scattered ``admitting`` flags and completion-time frees — is an explicit
 state machine::
 
     EMPTY ──▶ ADMITTING ──▶ ACTIVE ──▶ DRAINED ──▶ EMPTY
-                              │  ▲
-                     preempt  ▼  │ last page injected
-                          PREEMPTED ──▶ RESTORING
+                 ▲            │  ▲        │
+                 │   preempt  ▼  │        ▼ park (session retention)
+                 │        PREEMPTED ──▶ RESTORING
+                 │                        ▲
+                 └──────── PARKED ────────┘-ish    (see below)
 
 * **EMPTY** — no request; every per-slot cache row cleared / unmapped.
 * **ADMITTING** — prompt chunks landing (one per step); masked out of
@@ -22,8 +24,17 @@ state machine::
   reclaimed.
 * **RESTORING** — page blobs re-allocated and injected chunk-by-chunk,
   interleaved with the batch's decode steps exactly like prefill chunks.
-* **DRAINED** — request completed this step; pages freed, row unmapped;
-  transitions to EMPTY when the slot is released for reuse.
+* **DRAINED** — request completed this step; transitions to EMPTY when the
+  slot is released for reuse, or — with session parking on — to PARKED.
+* **PARKED** — the FaaSKeeper session move: the request completed but its
+  session's KV pages (and recurrent rows) stay resident, owned by the
+  scheduler's parked-session record, so the session's *next* request maps
+  them shared (copy-on-write) and prefills only its new tail tokens.  A
+  parked slot is masked out of decode like EMPTY, pins **zero
+  reservation**, and is reclaimable: a new admission may evict it (rows
+  snapshotted to the parked record; under pool pressure the pages offload
+  through the page-blob store).  PARKED -> ADMITTING is the in-place
+  unpark; PARKED -> EMPTY is eviction or TTL expiry.
 
 Transitions outside :data:`TRANSITIONS` raise — the scheduler cannot
 silently re-grow the flag soup.  ``reset()`` (crash recovery) is the one
@@ -44,18 +55,22 @@ class SlotState(enum.Enum):
     PREEMPTED = "preempted"
     RESTORING = "restoring"
     DRAINED = "drained"
+    PARKED = "parked"
 
 
 # Legal transitions.  RESTORING -> PREEMPTED is deliberately absent: a
 # restore, once funded by the reservation gate, always runs to completion
 # (re-preempting a half-injected slot would interleave two blob generations).
+# PARKED -> ACTIVE is likewise absent: an unpark always re-enters through
+# ADMITTING (at least the last history token is re-fed to seed sampling).
 TRANSITIONS: Dict[SlotState, tuple] = {
     SlotState.EMPTY: (SlotState.ADMITTING,),
     SlotState.ADMITTING: (SlotState.ACTIVE,),
     SlotState.ACTIVE: (SlotState.PREEMPTED, SlotState.DRAINED),
     SlotState.PREEMPTED: (SlotState.RESTORING,),
     SlotState.RESTORING: (SlotState.ACTIVE,),
-    SlotState.DRAINED: (SlotState.EMPTY,),
+    SlotState.DRAINED: (SlotState.EMPTY, SlotState.PARKED),
+    SlotState.PARKED: (SlotState.ADMITTING, SlotState.EMPTY),
 }
 
 
@@ -76,8 +91,10 @@ class Slot:
     chunks: Optional[List] = None      # pending prompt chunks (ADMITTING)
     chunk_i: int = 0
     len: int = 0                       # host mirror of the slot's live length
-    pages: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)   # owned (rc 1 at alloc)
+    shared: List[int] = dataclasses.field(default_factory=list)  # share-mapped refs
     need: int = 0                      # worst-case page count (reservation)
+    reused: int = 0                    # prompt tokens served from shared pages
     n_out: int = 0
     admitted_step: int = 0             # step the request entered the slot
     submitted_step: int = 0
@@ -89,6 +106,10 @@ class Slot:
     blob: Any = None                   # host-side page blob during restore
     restore_i: int = 0                 # pages injected so far
     preempts: int = 0                  # times this request was preempted
+
+    # -- parking bookkeeping (PARKED) ---------------------------------------
+    session: Optional[str] = None      # session whose parked record owns this slot
+    parked_step: int = 0               # step the slot entered PARKED (TTL clock)
 
     def to(self, new_state: SlotState) -> "Slot":
         if new_state not in TRANSITIONS[self.state]:
@@ -113,6 +134,16 @@ class Slot:
     @property
     def occupied(self) -> bool:
         return self.state is not SlotState.EMPTY
+
+    @property
+    def parked(self) -> bool:
+        return self.state is SlotState.PARKED
+
+    @property
+    def working(self) -> bool:
+        """Carrying an in-flight request (PARKED retention is not work —
+        ``busy()`` must not spin on it)."""
+        return self.state not in (SlotState.EMPTY, SlotState.PARKED)
 
     @property
     def decoding(self) -> bool:

@@ -55,6 +55,37 @@ write, the output ring advance, and every per-slot cache row
 stale state cannot advance, and its dangling pool writes are dropped by the
 unmapped page table.
 
+**Refcounted copy-on-write prefix sharing** (``prefix_sharing=True``, paged
+mode): KV pages are a shared resource.  The :class:`kvcache.PageAllocator`
+refcounts every page (alloc/share/release); completed requests publish their
+*full* pages into a content-addressed :class:`kvcache.PrefixIndex` keyed by
+token-chain hashes, and a new request whose prompt carries an indexed prefix
+maps those pages **read-only** (one extra reference each) and prefills only
+its tail.  Any write through a page with refcount > 1 — a chunked-prefill
+tail landing in a shared boundary page, or a decode append — first
+copy-on-write splits the page (:func:`kvcache.copy_pages`) onto a fresh
+page and remaps only the writer's table, so every other reference keeps
+reading the original bytes (FaaSFS's journaled CoW consistency model).
+Index sharing is only consulted for pure-attention families (dense/moe):
+recurrent rows (hybrid conv/RG-LRU state) cannot be reconstructed from KV
+pages alone.
+
+**Cross-request session parking** (``park_sessions=True``): the FaaSKeeper
+session move — a session's state outlives the invocation that built it.  A
+completed slot enters ``PARKED`` instead of freeing its pages: a
+per-session record takes ownership of the page references (plus the token
+history and, once the slot itself is reclaimed, a host snapshot of the
+per-slot rows), so the session's *next* request — whose prompt extends the
+recorded history, the multi-turn chat shape — maps the parked pages shared
+and prefills only the new tokens.  Parked capacity is fully reclaimable:
+a new admission may take the slot (rows snapshot to the record), and under
+pool pressure parked pages offload through the same
+:class:`~repro.core.storage.PageBlobStore` path preemption uses — the next
+request then restores the blob instead of re-prefilling, trading a storage
+GET + retention for prompt-length compute.  ``park_ttl_steps`` bounds the
+retention window.  ``reset()`` clears the prefix index and the parked
+table: a crash-replayed run must never observe another life's shared state.
+
 Per-session FIFO is preserved structurally: a session's next request is only
 admitted after its predecessor completes (the ``_active_sessions`` gate), and
 the pending list is scanned in arrival order.
@@ -72,7 +103,7 @@ chunks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -100,6 +131,8 @@ class _Request:
     prompt: Any                 # (P,) int tokens
     max_new: int
     submit_step: int = 0
+    hashes: Any = None          # prompt page-chain hashes, computed once (a
+    # held request is re-matched every _fill_slots pass)
 
 
 @dataclasses.dataclass
@@ -111,6 +144,43 @@ class CompletedRequest:
     finished_step: int
     submitted_step: int = 0     # admission stall = admitted - submitted
     preempts: int = 0           # times this request was preempted mid-decode
+    reused_tokens: int = 0      # prompt tokens served from shared/parked pages
+
+
+@dataclasses.dataclass
+class ParkedSession:
+    """The durable half of a parked session: the KV-page journal a completed
+    request leaves behind so its session's next request restores instead of
+    re-prefilling.  Owns one allocator reference per resident page; the
+    journal is immutable (writers CoW-split), dropped only when superseded
+    by a longer history, diverged from, expired, or reset."""
+
+    session: str
+    history: np.ndarray         # prompt + generated tokens
+    consumed: int               # tokens whose KV/recurrent state is captured
+    prompt_len: int             # tokens whose KV came through the *prefill*
+    # path (chunked sdpa) — bitwise-reproducible by a re-prefill.  Decode-
+    # path KV (append-attention, S=1) differs in low bf16 bits, so pure-
+    # attention families reuse only [0, prompt_len) and re-prefill the
+    # generated tail; hybrid reuses [0, consumed) because its recurrent
+    # rows cannot be rewound (they advanced through the generated tokens).
+    page_row: np.ndarray        # logical -> physical page map at park time
+    pages: List[int]            # resident page references the record owns
+    slot: Optional[int] = None  # still holding its slot (rows live on device)
+    state: Any = None           # host row snapshot once the slot is reclaimed
+    blob_key: Optional[str] = None        # pages offloaded under pool pressure
+    blob_pidx: List[int] = dataclasses.field(default_factory=list)
+    parked_step: int = 0
+
+
+@dataclasses.dataclass
+class _MatchPlan:
+    """How much of an arriving prompt is already resident, and where."""
+
+    kind: str = "none"          # none | park | park-blob | index
+    C: int = 0                  # matched tokens (their KV will be reused)
+    pages: List[int] = dataclasses.field(default_factory=list)  # logical order
+    record: Optional[ParkedSession] = None
 
 
 class DecodeScheduler:
@@ -124,7 +194,10 @@ class DecodeScheduler:
                  offload: bool = False,
                  preempt_policy: Optional[str] = None,
                  idle_preempt_steps: int = 0,
-                 blob_store: Optional[PageBlobStore] = None):
+                 blob_store: Optional[PageBlobStore] = None,
+                 prefix_sharing: bool = False,
+                 park_sessions: bool = False,
+                 park_ttl_steps: int = 0):
         if not supports_continuous(model.cfg):
             raise ValueError(
                 f"family {model.cfg.family!r} has no per-slot decode path; "
@@ -139,6 +212,10 @@ class DecodeScheduler:
         if offload and kv_mode != "paged":
             raise ValueError("KV offload needs the paged pool (kv_mode='paged'); "
                              "per-slot rings have no page granularity to evict")
+        if (prefix_sharing or park_sessions) and kv_mode != "paged":
+            raise ValueError(
+                "prefix sharing / session parking need the paged pool "
+                "(kv_mode='paged'); per-slot rings have no shareable pages")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -151,6 +228,31 @@ class DecodeScheduler:
         self.offload = bool(offload) and kv_mode == "paged" and self._has_kv
         self.preempt_policy = preempt_policy if self.offload else "none"
         self.idle_preempt_steps = idle_preempt_steps
+        # -- prefix sharing / session parking -------------------------------
+        self.prefix_sharing = (bool(prefix_sharing) and kv_mode == "paged"
+                               and self._has_kv)
+        self.park_sessions = (bool(park_sessions) and kv_mode == "paged"
+                              and self._has_kv)
+        self.park_ttl_steps = park_ttl_steps
+        # index sharing reconstructs state from KV pages alone, which only
+        # pure-attention families allow (hybrid conv/RG-LRU rows are not in
+        # the pool); parking keeps the rows, so it covers every family
+        self._attention_only = model.cfg.family in ("dense", "moe")
+        self._index_sharing = self.prefix_sharing and self._attention_only
+        self.prefix_index = kvcache.PrefixIndex()
+        self._parked: Dict[str, ParkedSession] = {}
+        self._copy_pages = jax.jit(kvcache.copy_pages)
+        self._gather_state = jax.jit(kvcache.gather_slot_state)
+        self._scatter_state = jax.jit(kvcache.scatter_slot_state)
+        self.shared_prefix_tokens = 0   # prompt tokens never re-prefilled
+        self.park_hits = 0
+        self.park_misses = 0
+        self.index_hits = 0
+        self.cow_splits = 0
+        self.parks = 0
+        self.park_evictions = 0         # parked slots reclaimed for admissions
+        self.park_offloads = 0          # parked page sets pushed to the blob store
+        self.park_expirations = 0
 
         if kv_mode == "paged":
             self.page_size = page_size
@@ -281,10 +383,18 @@ class DecodeScheduler:
         self._fill_slots()
 
     def busy(self) -> bool:
-        return any(s.occupied for s in self.slots) or bool(self.pending)
+        """In-flight work pending.  PARKED retention is not work: a parked
+        slot is a cache entry, not a request — spinning on it would hold the
+        serving invocation open forever."""
+        return any(s.working for s in self.slots) or bool(self.pending)
 
     def free_slots(self) -> int:
-        return sum(1 for s in self.slots if s.empty)
+        """Slots a new admission can take (EMPTY, plus PARKED ones — parked
+        residency is reclaimable, its record survives on the host)."""
+        return sum(1 for s in self.slots if s.empty or s.parked)
+
+    def parked_slots(self) -> int:
+        return sum(1 for s in self.slots if s.parked)
 
     def active_slots(self) -> int:
         """Slots decoding+sampling this step (admitting/preempted excluded)."""
@@ -324,25 +434,41 @@ class DecodeScheduler:
         held_sessions: set = set()    # a held request gates its whole session:
         # a page-starved r0 must not be overtaken by its session's smaller r1
         pool_starved = False
+        if self.park_sessions and self.park_ttl_steps > 0:
+            self._expire_parked()
         for req in self.pending:
-            slot = next((s for s in self.slots if s.empty), None)
-            if slot is None:
-                held.append(req)
-                held_sessions.add(req.session)
-                continue
             if req.session in self._active_sessions or req.session in held_sessions:
                 held.append(req)      # FIFO gate: predecessor decoding or held
                 held_sessions.add(req.session)
                 continue
-            need = self._pages_needed(req)
+            plan = self._match_prefix(req)
+            slot = self._slot_for(plan)
+            if slot is None and not any(s.parked for s in self.slots):
+                held.append(req)
+                held_sessions.add(req.session)
+                continue
+            need = self._plan_pages(req, plan)
             if need and self._uncommitted() < need:
-                # pool gate: try the preemption policy before holding
-                if not self._preempt_for(need):
+                # pool gate: reclaim shareable capacity first (index refs,
+                # then parked retention), then try the preemption policy
+                self._reclaim_pool(need, keep=plan.record, pinned=plan.pages)
+                if (self._uncommitted() < need
+                        and not self._preempt_for(need)):
                     pool_starved = True
                     held.append(req)
                     held_sessions.add(req.session)
                     continue
-            self._admit(slot, req, need)
+            if slot is None:
+                # only now — with the pool gate passed — reclaim a parked
+                # residency (a held request must not cost a snapshot);
+                # _reclaim_pool may already have freed one by offloading
+                slot = next((s for s in self.slots if s.empty), None)
+                if slot is None:
+                    victim = min((s for s in self.slots if s.parked),
+                                 key=lambda s: s.parked_step)
+                    self._evict_parked_slot(self._parked[victim.session])
+                    slot = self.slots[victim.index]
+            self._admit(slot, req, plan)
         self.pending = held
         # restores only start when pool pressure has cleared: no pending
         # request is pool-gated, and the uncommitted margin funds the
@@ -350,9 +476,108 @@ class DecodeScheduler:
         if not pool_starved:
             self._start_restores()
 
-    def _admit(self, slot: Slot, req: _Request, need: int = 0) -> None:
+    # -- prefix matching / parked-capacity planning -------------------------
+
+    def _match_prefix(self, req: _Request) -> _MatchPlan:
+        """The longest resident prefix of this prompt: the session's parked
+        journal if the prompt extends it (pages or blob), else the longest
+        indexed full-page chain.  At least the last prompt token always
+        re-runs — its logits seed sampling."""
+        plan = _MatchPlan()
+        if not (self.kv_mode == "paged" and self._has_kv):
+            return plan
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        P = len(prompt)
+        rec = self._parked.get(req.session) if self.park_sessions else None
+        if rec is not None:
+            lim = min(P, len(rec.history))
+            eq = prompt[:lim] == rec.history[:lim]
+            common = lim if eq.all() else int(np.argmin(eq))
+            if self._attention_only:
+                # reuse only the prefill-path span (see ParkedSession): the
+                # generated tail re-prefills, which is bitwise what the
+                # sharing-off scheduler would compute.  Cap at P-2 so the
+                # re-run tail is >= 2 tokens — a 1-token chunk would go
+                # through the S=1 append-attention path and write
+                # decode-flavoured KV into the prefill span
+                C = min(rec.prompt_len, common, P - 2)
+            else:
+                # recurrent rows advanced through every consumed token and
+                # cannot rewind: all or nothing (and the tail must be >= 2
+                # tokens for the same S=1 reason as above)
+                C = rec.consumed if (common >= rec.consumed
+                                     and P >= rec.consumed + 2) else 0
+            if C > 0:
+                plan.kind = "park-blob" if rec.blob_key else "park"
+                plan.C = C
+                plan.record = rec
+                if not rec.blob_key:
+                    plan.pages = [int(rec.page_row[i])
+                                  for i in range(-(-C // self.page_size))]
+                return plan
+            if common < lim:
+                # the prompt *contradicts* the journal: it can never serve
+                # this session again (per-session FIFO — this req is next)
+                self._drop_record(self._parked.pop(req.session))
+                self.park_misses += 1
+            # else: consistent but too short to reuse (e.g. an exact
+            # resubmission) — keep the journal; completion supersedes it
+        if self._index_sharing:
+            if req.hashes is None:
+                req.hashes = kvcache.page_hashes(prompt, self.page_size)
+            k_max = max(0, P - 2) // self.page_size   # tail >= 2 tokens
+            pids = self.prefix_index.lookup(req.hashes[:k_max])
+            if pids:
+                plan.kind = "index"
+                plan.C = len(pids) * self.page_size
+                plan.pages = [int(p) for p in pids]
+        return plan
+
+    def _chunk_tail(self, tail: np.ndarray) -> List[np.ndarray]:
+        """Split a prompt tail into prefill chunks, never ending on a
+        1-token chunk when it can be avoided: an S=1 forward goes through
+        the decode append-attention path, whose KV differs from the
+        prefill path in low bf16 bits — enough to flip MoE routing when a
+        later request re-reads the lane.  ``[3, 3, 1]`` becomes
+        ``[3, 2, 2]``.  A 1-token *total* tail, ``prefill_chunk=1``, or an
+        odd tail under ``prefill_chunk=2`` (where shrinking the penultimate
+        chunk would just move the 1) is unavoidable and left alone."""
+        chunk = self.prefill_chunk or len(tail)
+        sizes = [chunk] * (len(tail) // chunk)
+        if len(tail) % chunk:
+            sizes.append(len(tail) % chunk)
+        if len(sizes) >= 2 and sizes[-1] == 1 and sizes[-2] >= 3:
+            sizes[-2] -= 1
+            sizes[-1] = 2
+        out, i = [], 0
+        for s in sizes:
+            out.append(tail[i:i + s])
+            i += s
+        return out
+
+    def _plan_pages(self, req: _Request, plan: _MatchPlan) -> int:
+        """Reservation size under the plan: full worst case minus the full
+        pages mapped read-only (shared pages cost nothing until a CoW split;
+        the boundary partial page's split is inside the writable span, and a
+        blob unpark re-allocates its pages out of the same reservation)."""
+        total = self._pages_needed(req)
+        if plan.kind in ("park", "index"):
+            return total - plan.C // self.page_size
+        return total
+
+    def _slot_for(self, plan: _MatchPlan) -> Optional[Slot]:
+        """A free admission target: the plan's own parked slot (in-place
+        unpark) or any EMPTY slot.  PARKED residencies are reclaimable too,
+        but only *after* the pool gate passes — ``_fill_slots`` defers that
+        eviction so a held request never costs a journal its row snapshot."""
+        if (plan.kind == "park" and plan.record.slot is not None):
+            return self.slots[plan.record.slot]
+        return next((s for s in self.slots if s.empty), None)
+
+    def _admit(self, slot: Slot, req: _Request,
+               plan: Optional[_MatchPlan] = None) -> None:
         if self.kv_mode == "paged":
-            self._admit_paged(slot, req, need)
+            self._admit_paged(slot, req, plan or _MatchPlan())
             return
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]      # (1, P)
         logits, one = self._prefill(self.params, prompt)
@@ -371,26 +596,90 @@ class DecodeScheduler:
         self.prefill_tokens += int(prompt.shape[1])
         self.admitted += 1
 
-    def _admit_paged(self, slot: Slot, req: _Request, need: int) -> None:
-        """Begin a chunked admission: clear the slot's rows (fresh length,
-        recurrent state, unmapped page-table row) and stage the prompt's
-        chunks; one chunk runs per step() until the last lands."""
+    def _admit_paged(self, slot: Slot, req: _Request, plan: _MatchPlan) -> None:
+        """Begin a chunked admission.  With no resident prefix the slot's
+        rows are cleared and the whole prompt is staged; with one, the
+        matched pages are mapped read-only (shared) or restored from the
+        parked blob, the parked rows are reinstalled if the slot changed,
+        and only the prompt's tail is staged — the prefill the shared pages
+        already paid for is skipped."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-        chunk = self.prefill_chunk or len(prompt)
-        chunks = [prompt[i:i + chunk] for i in range(0, len(prompt), chunk)]
-        self.cache = kvcache.cache_clear_slot(self.cache, slot.index)
-        self._page_rows[slot.index, :] = -1
+        C = plan.C
+        need = self._plan_pages(req, plan)
+        chunks = self._chunk_tail(prompt[C:])
+        in_place = (plan.kind == "park" and plan.record.slot == slot.index)
+        if not in_place:
+            self.cache = kvcache.cache_clear_slot(self.cache, slot.index)
+            self._page_rows[slot.index, :] = -1
         self._reserved += need
         slot.to(SlotState.ADMITTING)
+        slot.session = None
         slot.req = req
         slot.chunks = chunks
         slot.chunk_i = 0
-        slot.len = 0                  # host mirror of the slot's live length
+        slot.len = C                  # host mirror of the slot's live length
         slot.pages = []
+        slot.shared = []
         slot.need = need
+        slot.reused = C
+        slot.n_out = 0
+        slot.preempts = 0
         slot.admitted_step = self.steps
         slot.submitted_step = req.submit_step
         self._active_sessions.add(req.session)
+        if plan.kind in ("park", "index"):
+            # map the matched prefix read-only: one extra reference per page
+            self.allocator.share(plan.pages)
+            slot.shared = list(plan.pages)
+            for i, pid in enumerate(plan.pages):
+                self._page_rows[slot.index, i] = pid
+            self.cache = kvcache.set_page_row(
+                self.cache, slot.index, self._page_rows[slot.index])
+            if plan.kind == "park":
+                rec = plan.record
+                if in_place:
+                    # the new request will overwrite the live rows; keep the
+                    # journal self-contained so it can offload mid-flight
+                    rec.state = jax.device_get(
+                        self._gather_state(self.cache, slot.index))
+                    rec.slot = None
+                elif rec.state is not None:
+                    self.cache = self._scatter_state(
+                        self.cache, slot.index, rec.state)
+                # the snapshot's length is rec.consumed; attention families
+                # rewind to the prefill-path span C and re-prefill the rest
+                self.cache["length"] = self.cache["length"].at[slot.index].set(C)
+                self.park_hits += 1
+            else:
+                # index pages carry KV only — set the slot's consumed length
+                # (index matches are gated to pure-attention families, so
+                # there are no recurrent rows to reconstruct)
+                self.cache["length"] = self.cache["length"].at[slot.index].set(C)
+                self.index_hits += 1
+        elif plan.kind == "park-blob":
+            # restore only the reused span of the journal's blob out of
+            # this admission's own reservation (an attention family may
+            # reuse far fewer pages than the blob holds — a long generated
+            # tail re-prefills instead of restoring); the record keeps its
+            # whole blob until superseded
+            rec = plan.record
+            npg = -(-C // self.page_size)
+            pids = self.allocator.alloc(npg)
+            self._reserved -= npg
+            slot.pages = list(pids)
+            for j in range(npg):
+                self._page_rows[slot.index, rec.blob_pidx[j]] = pids[j]
+            blob = self.blob_store.get(rec.blob_key)
+            if npg < len(rec.blob_pidx):
+                blob = kvcache.slice_page_blob(blob, 0, npg)
+            self.cache = self._inject(self.cache,
+                                      jnp.asarray(pids, jnp.int32), blob)
+            self.cache = kvcache.set_page_row(
+                self.cache, slot.index, self._page_rows[slot.index])
+            self.cache = self._scatter_state(self.cache, slot.index, rec.state)
+            self.cache["length"] = self.cache["length"].at[slot.index].set(C)
+            self.park_hits += 1
+        self.shared_prefix_tokens += C
 
     def _map_page(self, slot: Slot, page_idx: int) -> None:
         """Host-side mapping only — the caller pushes the updated row to the
@@ -401,19 +690,141 @@ class DecodeScheduler:
         self._reserved -= 1
 
     def _release_slot(self, slot: Slot) -> None:
-        """Free a DRAINED slot's pages and any unused reservation; unmap its
-        device page-table row so residual decode traffic is dropped."""
+        """Release a DRAINED slot's page references (owned pages free when
+        their last reference dies; shared pages just drop one count) and any
+        unused reservation; unmap its device page-table row so residual
+        decode traffic is dropped."""
         slot.to(SlotState.EMPTY)
         if not (self.kv_mode == "paged" and self._has_kv):
             self.slots[slot.index] = Slot(index=slot.index)
             return
         self._reserved -= slot.need - len(slot.pages)
-        if slot.pages:
-            self.allocator.free(slot.pages)
+        if slot.pages or slot.shared:
+            self.allocator.release(slot.pages + slot.shared)
         self._page_rows[slot.index, :] = -1
         self.cache = kvcache.set_page_row(
             self.cache, slot.index, self._page_rows[slot.index])
         self.slots[slot.index] = Slot(index=slot.index)
+
+    # -- session parking (cross-request KV retention) ------------------------
+
+    def _publish_index(self, row: np.ndarray, history: np.ndarray,
+                       prompt_len: int, hashes=None) -> None:
+        """Publish a finished sequence's full *prompt-span* pages into the
+        prefix index (content-addressed by token chain; the index takes one
+        reference per adopted page).  Pages holding generated tokens are
+        not published: their KV went through the S=1 decode path, which is
+        not bitwise what a re-prefill would compute (see ParkedSession).
+        ``hashes`` reuses the request's cached prompt chain when the
+        admission already computed it."""
+        full = prompt_len // self.page_size
+        if not full:
+            return
+        if hashes is None:
+            hashes = kvcache.page_hashes(history[: full * self.page_size],
+                                         self.page_size)
+        self.prefix_index.publish(hashes[:full],
+                                  [int(row[i]) for i in range(full)],
+                                  self.allocator)
+
+    def _park_slot(self, slot: Slot, req: _Request, tokens: np.ndarray) -> None:
+        """Park a DRAINED slot: ownership of every mapped page transfers to
+        the session's journal record, full pages are published to the prefix
+        index, and the slot enters PARKED with its device row unmapped (so
+        its masked decode traffic can never touch the journal)."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        history = np.concatenate([prompt,
+                                  np.asarray(tokens, np.int32).reshape(-1)])
+        consumed = slot.len
+        row = self._page_rows[slot.index].copy()
+        self._reserved -= slot.need - len(slot.pages)
+        if self._index_sharing:
+            self._publish_index(row, history, len(prompt), hashes=req.hashes)
+        old = self._parked.pop(req.session, None)
+        if old is not None:
+            self._drop_record(old)          # superseded journal
+        self._parked[req.session] = ParkedSession(
+            session=req.session, history=history, consumed=consumed,
+            prompt_len=len(prompt), page_row=row,
+            pages=slot.pages + slot.shared, slot=slot.index,
+            parked_step=self.steps)
+        self._page_rows[slot.index, :] = -1
+        self.cache = kvcache.set_page_row(
+            self.cache, slot.index, self._page_rows[slot.index])
+        slot.to(SlotState.PARKED)
+        slot.session = req.session
+        slot.parked_step = self.steps
+        slot.req = None
+        slot.pages, slot.shared = [], []
+        slot.need = 0
+        self.parks += 1
+
+    def _evict_parked_slot(self, rec: ParkedSession) -> None:
+        """Reclaim a parked slot for a new admission: snapshot its rows to
+        the host (lengths + recurrent state; the pages stay resident, owned
+        by the record) and free the slot."""
+        slot = self.slots[rec.slot]
+        rec.state = jax.device_get(self._gather_state(self.cache, rec.slot))
+        slot.to(SlotState.EMPTY)
+        self.slots[rec.slot] = Slot(index=rec.slot)
+        rec.slot = None
+        self.park_evictions += 1
+
+    def _offload_parked(self, rec: ParkedSession) -> None:
+        """Pool pressure: push a parked journal's pages to the blob store
+        (position-ordered, like a preemption) and release the references —
+        the session's next request restores the blob instead of
+        re-prefilling, paying a storage GET for prompt-length compute."""
+        if rec.slot is not None:
+            self._evict_parked_slot(rec)
+        npg = -(-rec.consumed // self.page_size)
+        phys = [int(rec.page_row[i]) for i in range(npg)]
+        blob = jax.device_get(
+            self._extract(self.cache, jnp.asarray(phys, jnp.int32)))
+        key = f"park/{rec.session}/s{self.steps}"
+        self.blob_store.put(key, blob, kvcache.blob_nbytes(blob))
+        rec.blob_key = key
+        rec.blob_pidx = list(range(npg))
+        self.allocator.release(rec.pages)
+        rec.pages = []
+        self.park_offloads += 1
+
+    def _drop_record(self, rec: ParkedSession) -> None:
+        """Forget a journal (superseded, diverged, expired, or reclaimed):
+        release its page references and delete its blob; a still-resident
+        slot goes back to EMPTY."""
+        if rec.slot is not None:
+            slot = self.slots[rec.slot]
+            slot.to(SlotState.EMPTY)
+            self.slots[rec.slot] = Slot(index=rec.slot)
+        if rec.pages:
+            self.allocator.release(rec.pages)
+        if rec.blob_key:
+            self.blob_store.delete(rec.blob_key)
+
+    def _expire_parked(self) -> None:
+        for session, rec in list(self._parked.items()):
+            if self.steps - rec.parked_step > self.park_ttl_steps:
+                self._drop_record(self._parked.pop(session))
+                self.park_expirations += 1
+
+    def _reclaim_pool(self, need: int, keep: Optional[ParkedSession] = None,
+                      pinned: Sequence[int] = ()) -> None:
+        """Pool-gated admission: reclaim shareable capacity cheapest-first —
+        drop LRU prefix-index references (free if nobody else maps the
+        page), then offload parked journals to the blob store, oldest
+        first.  ``keep`` is the record the admission itself consumes and
+        ``pinned`` the index pages its plan is about to map."""
+        self.prefix_index.evict(self.allocator, self._reserved + need,
+                                pinned=pinned)
+        if self._uncommitted() >= need:
+            return
+        for rec in sorted((r for r in self._parked.values()
+                           if r.pages and r is not keep),
+                          key=lambda r: r.parked_step):
+            if self._uncommitted() >= need:
+                break
+            self._offload_parked(rec)
 
     # -- preemption / restore (storage-backed slot reclamation) -----------------
 
@@ -464,11 +875,16 @@ class DecodeScheduler:
         slot.blob_pidx = pidx
         slot.restore_i = 0
         slot.preempts += 1
-        # release the slot's whole pool commitment: mapped pages back to the
-        # free list, unmapped growth back to the uncommitted margin
+        # release the slot's whole pool commitment: page references dropped
+        # (owned pages free; shared prefix pages keep their other holders),
+        # unmapped growth back to the uncommitted margin.  The restore era
+        # owns every page it injects — the blob covers shared prefix pages
+        # too — so the reservation grows back to the full worst case.
         self._reserved -= slot.need - len(slot.pages)
-        self.allocator.free(slot.pages)
+        self.allocator.release(slot.pages + slot.shared)
         slot.pages = []
+        slot.shared = []
+        slot.need = self._pages_needed(slot.req)
         self._page_rows[slot.index, :] = -1
         self.cache = kvcache.set_page_row(
             self.cache, slot.index, self._page_rows[slot.index])
@@ -524,23 +940,56 @@ class DecodeScheduler:
         the calibrated obj_read/obj_write latency + Table-4 cost models."""
         return self.blob_store.drain_ops()
 
+    def _prepare_write_span(self, slot: Slot, pos0: int, count: int) -> None:
+        """Make the pages under ``[pos0, pos0 + count)`` writable for this
+        slot: map unmapped pages (alloc-on-write, within the reservation)
+        and copy-on-write split any mapped page that another reference
+        still reads — the writer gets a private copy on a fresh page and
+        remaps only its own table row, so the prefix index / parked journal
+        / sibling slot keeps reading the original bytes."""
+        changed = False
+        hi = min((pos0 + count - 1) // self.page_size, self.max_pages - 1)
+        for pidx in range(pos0 // self.page_size, hi + 1):
+            pid = int(self._page_rows[slot.index, pidx])
+            if pid < 0:
+                if len(slot.pages) < slot.need:
+                    self._map_page(slot, pidx)
+                    changed = True
+                # else: reservation exhausted — the dangling final write
+                # past it scatters out of bounds and is dropped
+            elif self.allocator.refcount(pid) > 1:
+                new = self.allocator.alloc(1)[0]
+                if pid in slot.shared:
+                    # the split of a shared prefix page was part of this
+                    # admission's reservation (need counts every writable page)
+                    self._reserved -= 1
+                    slot.shared.remove(pid)
+                else:
+                    # an owned page some external holder (index/journal) still
+                    # references: swap it out, reservation-neutral
+                    slot.pages.remove(pid)
+                slot.pages.append(new)
+                self.cache = self._copy_pages(
+                    self.cache, jnp.asarray([pid], jnp.int32),
+                    jnp.asarray([new], jnp.int32))
+                self.allocator.release([pid])
+                self._page_rows[slot.index, pidx] = new
+                self.cow_splits += 1
+                changed = True
+        if changed:
+            self.cache = kvcache.set_page_row(
+                self.cache, slot.index, self._page_rows[slot.index])
+
     def _run_chunk(self, slot: Slot) -> None:
         """One prefill chunk for one admitting slot (alloc-on-write: map the
-        pages the chunk's span touches, then a B=1 forward against the shared
-        pool).  The final chunk's logits seed the slot's first token."""
+        pages the chunk's span touches — CoW-splitting any shared boundary
+        page — then a B=1 forward against the shared pool).  The final
+        chunk's logits seed the slot's first token."""
         chunk = slot.chunks[slot.chunk_i]
         C = len(chunk)
         pos0 = slot.len
         if self._has_kv:
-            mapped = False
-            for pidx in range(pos0 // self.page_size,
-                              (pos0 + C - 1) // self.page_size + 1):
-                if self._page_rows[slot.index, pidx] < 0:
-                    self._map_page(slot, pidx)
-                    mapped = True
-            if mapped:
-                self.cache = kvcache.set_page_row(
-                    self.cache, slot.index, self._page_rows[slot.index])
+            self._prepare_write_span(slot, pos0, C)
         logits, self.cache = self._chunk(
             self.params, self.cache, jnp.asarray(chunk)[None], slot.index)
         slot.len += C
@@ -609,17 +1058,13 @@ class DecodeScheduler:
         if not active:
             return []
         if self.kv_mode == "paged" and self._has_kv:
-            # alloc-on-write for decode growth: map the page this step's
-            # token write lands in (within the slot's reservation; the final
-            # step's dangling write past it is dropped by the unmapped table)
+            # alloc-on-write for decode growth: make the page this step's
+            # token write lands in writable — map it if unmapped (within the
+            # reservation; the final step's dangling write past it is
+            # dropped by the unmapped table), CoW-split it if shared
             for i in active:
                 st = self.slots[i]
-                if len(st.pages) < st.need:
-                    pidx = st.len // self.page_size
-                    if pidx < self.max_pages and self._page_rows[i, pidx] < 0:
-                        self._map_page(st, pidx)
-                        self.cache = kvcache.set_page_row(
-                            self.cache, i, self._page_rows[i])
+                self._prepare_write_span(st, st.len, 1)
         mask = np.zeros((self.n_slots,), bool)
         mask[active] = True
         self._key, sub = jax.random.split(self._key)
@@ -640,12 +1085,23 @@ class DecodeScheduler:
             if st.n_out >= st.req.max_new:
                 req = st.req
                 st.to(SlotState.DRAINED)
+                tokens = np.asarray(self.out_buf[i, : req.max_new])
                 finished.append(CompletedRequest(
                     session=req.session, request_id=req.request_id,
-                    tokens=np.asarray(self.out_buf[i, : req.max_new]),
+                    tokens=tokens,
                     admitted_step=st.admitted_step, finished_step=self.steps,
-                    submitted_step=st.submitted_step, preempts=st.preempts))
-                self._release_slot(st)
+                    submitted_step=st.submitted_step, preempts=st.preempts,
+                    reused_tokens=st.reused))
+                if self.park_sessions:
+                    self._park_slot(st, req, tokens)
+                else:
+                    if self._index_sharing:
+                        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+                        self._publish_index(
+                            self._page_rows[st.index],
+                            np.concatenate([prompt, tokens.astype(np.int32)]),
+                            len(prompt), hashes=req.hashes)
+                    self._release_slot(st)
                 self._active_sessions.discard(req.session)
                 self.completed += 1
         if finished:
@@ -655,13 +1111,18 @@ class DecodeScheduler:
     def reset(self) -> None:
         """Abort all in-flight work (crash recovery: the queue layer
         redelivers; completed requests are deduped by the frontend).  The
-        pool returns to fully free, every page-table row to unmapped, and
-        the blob store is emptied — a redelivered admission replays from its
-        prompt, never from an orphaned blob."""
+        pool returns to fully free, every page-table row to unmapped, the
+        blob store is emptied, and the prefix index and parked-session table
+        are cleared — a redelivered admission replays from its prompt, never
+        from an orphaned blob or another life's shared pages."""
         self.slots = [s.force_empty() for s in self.slots]
         self.pending = []
         self._active_sessions.clear()
         self._preempted_order = []
+        # allocator.reset() below wipes every reference wholesale, so the
+        # index and parked table just forget their entries
+        self.prefix_index.clear()
+        self._parked.clear()
         self.last_tokens = jnp.zeros((self.n_slots,), jnp.int32)
         self.out_buf = jnp.zeros((self.n_slots, self.max_seq), jnp.int32)
         self.out_pos = jnp.zeros((self.n_slots,), jnp.int32)
@@ -672,6 +1133,66 @@ class DecodeScheduler:
             self._page_rows[:] = -1
             for slot in range(self.n_slots):
                 self.cache = kvcache.cache_clear_slot(self.cache, slot)
+
+    # -- invariant audit (the differential harness calls this every step) ----------
+
+    def audit(self) -> None:
+        """Raise AssertionError if any allocator / refcount / reservation
+        invariant is violated.  Checks: ``free + in_use == n_pages``; every
+        mapped page has refcount >= 1; the refcount total equals the
+        references actually held (slot owned + slot shared + parked journals
+        + prefix index); no page is owned by two slots; every page-table row
+        maps exactly the pages its slot holds; the reservation ledger equals
+        the outstanding worst-case growth; parked records and PARKED slots
+        point at each other consistently."""
+        if not (self.kv_mode == "paged" and self._has_kv):
+            return
+        a = self.allocator
+        a.check()
+        refs = 0
+        owned_seen: set = set()
+        for s in self.slots:
+            refs += len(s.pages) + len(s.shared)
+            for p in s.pages:
+                assert p not in owned_seen, f"page {p} owned by two slots"
+                owned_seen.add(p)
+        for rec in self._parked.values():
+            refs += len(rec.pages)
+        refs += len(self.prefix_index)
+        assert refs == a.total_refs, (
+            f"refcount drift: holders sum to {refs}, allocator says "
+            f"{a.total_refs}")
+        for s in self.slots:
+            row = self._page_rows[s.index]
+            mapped = {int(p) for p in row if p >= 0}
+            held = set(s.pages) | set(s.shared)
+            assert mapped == held, (
+                f"slot {s.index} ({s.state.value}): row maps {mapped}, "
+                f"holds {held}")
+            for p in mapped:
+                assert a.refcount(p) >= 1, f"slot {s.index} maps freed page {p}"
+        reserved = sum(
+            s.need - len(s.pages) for s in self.slots
+            if s.state in (SlotState.ADMITTING, SlotState.ACTIVE,
+                           SlotState.RESTORING))
+        assert reserved == self._reserved, (
+            f"reservation ledger drift: slots imply {reserved}, "
+            f"ledger says {self._reserved}")
+        assert self._uncommitted() >= 0, (
+            f"over-committed pool: {self._reserved} reserved, "
+            f"{a.free_count} free")
+        for session, rec in self._parked.items():
+            if rec.slot is not None:
+                s = self.slots[rec.slot]
+                assert s.state is SlotState.PARKED and s.session == session, (
+                    f"parked record {session} points at slot {rec.slot} "
+                    f"in state {s.state.value} (session {s.session})")
+            assert bool(rec.blob_key) != bool(rec.pages) or not rec.pages, (
+                f"parked record {session} is both resident and offloaded")
+        parked_sessions = {s.session for s in self.slots if s.parked}
+        for sess in parked_sessions:
+            assert sess in self._parked and self._parked[sess].slot is not None, (
+                f"PARKED slot for session {sess} has no resident record")
 
     # -- reporting ------------------------------------------------------------------
 
@@ -730,6 +1251,24 @@ class DecodeScheduler:
             "offload_stored_high_water_bytes": bs.high_water_bytes,
         }
 
+    def sharing_stats(self) -> Dict[str, float]:
+        """Prefix-sharing / parking gauges: prompt tokens served from
+        resident pages instead of re-prefilled, hit/miss counts, CoW
+        splits, and the parked-retention flows."""
+        return {
+            "shared_prefix_tokens": self.shared_prefix_tokens,
+            "park_hits": self.park_hits,
+            "park_misses": self.park_misses,
+            "index_hits": self.index_hits,
+            "cow_splits": self.cow_splits,
+            "parks": self.parks,
+            "park_evictions": self.park_evictions,
+            "park_offloads": self.park_offloads,
+            "park_expirations": self.park_expirations,
+            "parked_sessions": len(self._parked),
+            "index_pages": len(self.prefix_index),
+        }
+
     def stats(self) -> Dict[str, float]:
         out = {
             "steps": self.steps,
@@ -744,4 +1283,6 @@ class DecodeScheduler:
             out["prefill_chunks"] = self.prefill_chunks
         if self.offload:
             out.update(self.offload_stats())
+        if self.prefix_sharing or self.park_sessions:
+            out.update(self.sharing_stats())
         return out
