@@ -138,6 +138,120 @@ def analyze_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     }
 
 
+def paged_decode_cell(arch: str = "qwen3-14b", *, n_slots: int = 8,
+                      page_size: int = 16, max_pages: int = 32,
+                      fill: float = 0.6, measure: bool = False) -> Dict:
+    """Gather-vs-fused HBM traffic for one paged decode step (§Tentpole 6).
+
+    The gather path pays the pooled view three times per attention layer:
+    the table-indexed pool read, the materialized ``(B, max_pages *
+    page_size, Hkv, D)`` write, and the attention re-read — all over the
+    *full logical span* regardless of how many lanes are live.  The fused
+    kernel streams each **mapped** page exactly once (unmapped blocks clamp
+    to an already-resident page and are masked in compute), so its bytes
+    scale with live pages.  HloCostAnalysis cannot see this (interpret-mode
+    Pallas lowers to a scan whose body it counts once), so the cell is an
+    analytic byte model over the same pool config, with step latency from
+    the chip's HBM bandwidth; ``measure=True`` adds wall-clock per decode
+    step for both scheduler backends on the reduced config (CPU: the fused
+    path runs the kernel in interpret mode, so wall time there is a
+    correctness proxy, not a speed claim — the bytes model is the claim).
+    """
+    from repro.models.config import layer_pattern
+    from repro.models.layers import COMPUTE_DTYPE
+
+    cfg = configs.get(arch)
+    if cfg.family == "hybrid":
+        n_attn_layers = layer_pattern(cfg).count("a")
+    else:
+        n_attn_layers = cfg.n_layers
+    span = max_pages * page_size
+    # ragged live lengths: slot i holds a deterministic fraction of the span
+    lengths = [max(1, int(span * fill * (i + 1) / n_slots))
+               for i in range(n_slots)]
+    mapped_pages = sum(-(-l // page_size) for l in lengths)
+    lane_bytes = (2 * cfg.n_kv_heads * cfg.the_head_dim()
+                  * jnp_dtype_bytes(COMPUTE_DTYPE))           # K+V per token
+    qo_bytes = n_slots * cfg.n_heads * cfg.the_head_dim() * 4 * 2
+
+    gather_layer = 3 * n_slots * span * lane_bytes + qo_bytes
+    fused_layer = mapped_pages * page_size * lane_bytes + qo_bytes
+    gather_bytes = gather_layer * n_attn_layers
+    fused_bytes = fused_layer * n_attn_layers
+
+    flops = (4 * sum(lengths) * cfg.n_heads * cfg.the_head_dim()
+             * n_attn_layers)
+    g = hlo_analysis.roofline(flops_total=flops, hbm_bytes_total=gather_bytes,
+                              wire_bytes_per_device=0.0, n_chips=1)
+    f = hlo_analysis.roofline(flops_total=flops, hbm_bytes_total=fused_bytes,
+                              wire_bytes_per_device=0.0, n_chips=1)
+    out = {
+        "cell": "paged_decode", "arch": arch, "status": "OK",
+        "n_slots": n_slots, "page_size": page_size, "max_pages": max_pages,
+        "live_tokens": sum(lengths), "mapped_pages": mapped_pages,
+        "attn_layers": n_attn_layers,
+        "gather_hbm_bytes": gather_bytes, "fused_hbm_bytes": fused_bytes,
+        "bytes_ratio": round(gather_bytes / fused_bytes, 3),
+        "gather_step_ms": round(g.bound_s * 1e3, 4),
+        "fused_step_ms": round(f.bound_s * 1e3, 4),
+        "fused_lt_gather": fused_bytes < gather_bytes,
+    }
+    if measure:
+        out["measured"] = _measure_paged_decode(arch, n_slots=n_slots,
+                                                page_size=page_size)
+    return out
+
+
+def jnp_dtype_bytes(dtype) -> int:
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype).itemsize
+
+
+def _measure_paged_decode(arch: str, *, n_slots: int, page_size: int,
+                          steps: int = 8) -> Dict:
+    """Steady-state wall-clock per decode step, both backends, reduced cfg."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.models import build_model
+    from repro.serve.scheduler import DecodeScheduler
+
+    cfg = configs.get(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    # prompt seed is pinned for the same reason tests/test_paged_kernel.py
+    # pins its PARITY_CASES: the fused kernel keeps softmax probs in fp32
+    # where gather's sdpa_append rounds to the activation dtype, so logits
+    # differ at ~1 ulp and the greedy argmax needs headroom on the reduced
+    # config for the parity gate to be meaningful.
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(n_slots)]
+    out: Dict = {}
+    tokens: Dict = {}
+    for backend in ("gather", "paged_kernel"):
+        sched = DecodeScheduler(model, params, n_slots=n_slots,
+                                max_seq=8 + steps, kv_mode="paged",
+                                page_size=page_size, attn_backend=backend)
+        for s in range(n_slots):
+            sched.submit(f"s{s}", f"r{s}", prompts[s], steps)
+        sched.step()                                   # admission + compile
+        t0 = time.time()
+        n = 0
+        while sched.busy():
+            sched.step()
+            n += 1
+        out[f"{backend}_wall_ms_per_step"] = round(
+            (time.time() - t0) * 1e3 / max(n, 1), 2)
+        tokens[backend] = np.asarray(sched.out_buf).copy()
+    out["token_parity"] = bool(
+        np.array_equal(tokens["gather"], tokens["paged_kernel"]))
+    return out
+
+
 def fmt_row(r: Dict) -> Dict:
     if r.get("status") != "OK":
         return {"arch": r.get("arch"), "shape": r.get("shape"),

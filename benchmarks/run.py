@@ -48,6 +48,26 @@ def main() -> None:
         sections.append({"section": name, "wall_s": round(time.time() - t_sec, 2),
                          "payload": payload})
 
+    print(f"\n{'='*72}\n=== paged-decode kernel (gather vs fused HBM bytes)\n{'='*72}")
+    from . import roofline
+
+    t_sec = time.time()
+    paged = roofline.paged_decode_cell(measure=smoke)
+    # the gate the kernel tentpole is held to: at equal pool config the
+    # fused table-indirect path must read strictly fewer HBM bytes than
+    # the gather path (PR 6 acceptance criterion)
+    assert paged["fused_hbm_bytes"] < paged["gather_hbm_bytes"], paged
+    assert paged["fused_lt_gather"], paged
+    if smoke:
+        assert paged["measured"]["token_parity"], (
+            "paged_kernel decode diverged from gather", paged)
+    print(f"gather {paged['gather_hbm_bytes']/1e6:.1f} MB vs fused "
+          f"{paged['fused_hbm_bytes']/1e6:.1f} MB per step "
+          f"({paged['bytes_ratio']}x, {paged['mapped_pages']} mapped pages)")
+    sections.append({"section": "paged_decode (kernel bytes gate)",
+                     "wall_s": round(time.time() - t_sec, 2),
+                     "payload": paged})
+
     if not smoke and "--skip-roofline" not in sys.argv:
         print(f"\n{'='*72}\n=== roofline (dry-run derived; full table in "
               f"EXPERIMENTS.md)\n{'='*72}")

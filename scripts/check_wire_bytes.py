@@ -31,7 +31,12 @@ DEFAULT_BASELINE = ROOT / "artifacts" / "wire_bytes_baseline.json"
 
 
 def cell_key(row: dict) -> str:
-    return f"{row['arch']}|{row['shape']}|{row['mesh']}"
+    """``arch|shape|mesh``, with non-default decode dispatch appended (the
+    paged-kernel cells gate independently of their gather twins)."""
+    key = f"{row['arch']}|{row['shape']}|{row['mesh']}"
+    if row.get("kernel") and row["kernel"] != "gather":
+        key += f"|{row['kernel']}"
+    return key
 
 
 def load_wire_bytes(matrix_path: Path) -> dict:

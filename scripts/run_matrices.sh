@@ -3,6 +3,9 @@
 # lowered AND compiled against 512 spoofed host devices, and the per-cell
 # memory / flops / wire-bytes records land in artifacts/dryrun_matrix.json
 # (consumed by tests/test_system.py::test_dryrun_matrix_artifact_complete).
+# Decode cells run on BOTH dispatch paths (--kernel both): the classic
+# gathered ring and the fused Pallas paged-attention pool, so a sharding
+# regression in either layout fails the wire-bytes gate as a named cell.
 #
 # Usage:  scripts/run_matrices.sh [out.json]
 #
@@ -16,7 +19,7 @@ OUT="${1:-artifacts/dryrun_matrix.json}"
 mkdir -p "$(dirname "$OUT")"
 
 JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m repro.launch.dryrun --all --mesh both --out "$OUT"
+    python -m repro.launch.dryrun --all --mesh both --kernel both --out "$OUT"
 
 python - "$OUT" <<'EOF'
 import json, sys

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -72,7 +74,7 @@ def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                            causal: bool = True, window: Optional[int] = None,
                            bq: int = 128, bk: int = 128,
                            t_real: Optional[int] = None,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (BH, S, D); k, v: (BH, T, D) — head-group mapping done by ops.py.
 
     Returns (BH, S, D).  S % bq == 0 and T % bk == 0 (ops.py pads;
@@ -105,5 +107,5 @@ def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq,), jnp.float32),     # running max
             pltpu.VMEM((bq,), jnp.float32),     # running normalizer
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

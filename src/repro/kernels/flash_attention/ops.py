@@ -16,7 +16,7 @@ from .kernel import flash_attention_kernel
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: Optional[int] = None,
                     bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, S, H, D); k, v: (B, T, Hkv, D) -> (B, S, H, D).
 
     GQA: repeats each kv head over its query group via the flattened BH dim

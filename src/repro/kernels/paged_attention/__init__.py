@@ -1,0 +1,4 @@
+from .ops import paged_attention
+from .ref import reference_paged_attention
+
+__all__ = ["paged_attention", "reference_paged_attention"]

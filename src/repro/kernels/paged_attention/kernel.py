@@ -1,0 +1,161 @@
+"""Paged-attention decode (S=1) Pallas TPU kernel.
+
+The table-indirect analogue of ``kernels/flash_attention``: instead of
+gathering a slot's pages into a contiguous (B, T, Hkv, D) tensor in HBM and
+running dense attention over it, the kernel streams K/V **pages** straight
+out of the shared ``(n_pages, page_size, Hkv, D)`` pool.  The per-slot page
+table rides in as a *scalar-prefetch* operand
+(:class:`~jax.experimental.pallas.tpu.PrefetchScalarGridSpec`), so the
+k/v ``index_map`` can resolve logical kv block ``j`` of slot ``b`` to its
+physical page ``page_table[b, j]`` before the grid step runs — the DMA
+engine fetches pages by table lookup and the gathered cache never exists in
+HBM.
+
+Tiling: grid ``(B, Hkv, max_pages)`` with the kv-page index innermost
+(sequential on TPU), one page per kv block.  The online-softmax running
+max / normalizer / accumulator live in VMEM scratch across the page sweep,
+exactly as in the flash kernel; the S=1 query block is the ``(G, D)`` head
+group of one kv head, so GQA costs one grid axis instead of a materialized
+``jnp.repeat``.
+
+Masking: lane ``t`` of page ``j`` is attendable iff its page is mapped
+(``page_table[b, j] >= 0``), ``t < lengths[b]`` (the slot's live length
+bounds the scan), and — for sliding-window archs — ``t > q_pos[b] -
+window``.  Unmapped blocks clamp their index_map to page 0 (a benign fetch,
+fully masked in compute; on TPU revisiting an already-resident block index
+skips the re-fetch).  Masked lanes are zeroed in ``p`` *after* the running
+max update, so a fully-masked page contributes nothing even while the
+running max is still ``NEG_INF`` — the flash kernel can lean on causal
+ordering to dodge that corner; a scrambled page table cannot.
+
+The kernel returns the **unnormalized** accumulator plus the running
+``(m, l)`` softmax state instead of the normalized output: ops.py folds the
+just-projected decode token in as a rank-1 fp32 update (the paged analogue
+of ``layers.sdpa_append``), which needs ``m``/``l`` to splice one more
+logit into the streamed softmax.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..runtime import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(len_ref, qpos_ref, pt_ref, q_ref, k_ref, v_ref,
+                       acc_out, m_out, l_out, acc_ref, m_ref, l_ref, *,
+                       page_size: int, n_blocks: int, scale: float,
+                       window: Optional[int]):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (ps, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (ps, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, ps)
+
+    t_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (t_pos < len_ref[b]) & (pt_ref[b, j] >= 0)
+    if window is not None:
+        mask &= t_pos > qpos_ref[b] - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    # zero masked lanes explicitly: while every page so far is masked the
+    # running max is still NEG_INF and exp(s - m) == 1 there, which would
+    # leak phantom weight into l/acc (scrambled tables hit this; the causal
+    # flash sweep never does)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        acc_out[0, 0] = acc_ref[...]
+        m_out[0, 0] = m_ref[...]
+        l_out[0, 0] = l_ref[...]
+
+
+def paged_attention_kernel(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
+                           page_table: jnp.ndarray, lengths: jnp.ndarray,
+                           q_pos: jnp.ndarray, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """q: (B, Hkv, G, D); kp/vp: (n_pages, page_size, Hkv, D);
+    page_table: (B, max_pages) int32, -1 = unmapped; lengths/q_pos: (B,).
+
+    Returns ``(acc, m, l)`` — acc ``(B, Hkv, G, D)`` fp32 unnormalized
+    accumulator, m/l ``(B, Hkv, G)`` running max / normalizer.  Rows with no
+    attendable lane come out as ``(0, NEG_INF, 0)``; ops.py owns both the
+    normalization and the new-token append.
+    """
+    B, Hkv, G, D = q.shape
+    page_size = kp.shape[1]
+    max_pages = page_table.shape[1]
+    grid = (B, Hkv, max_pages)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, page_size=page_size, n_blocks=max_pages,
+        scale=1.0 / math.sqrt(D), window=window)
+
+    def q_map(b, h, j, lens, qp, pt):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, j, lens, qp, pt):
+        # unmapped blocks clamp to page 0: a benign (masked) fetch, and on
+        # TPU a revisited block index skips the DMA entirely
+        return (jnp.maximum(pt[b, j], 0), 0, h, 0)
+
+    def o_map(b, h, j, lens, qp, pt):
+        return (b, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, 1, G), o_map),
+            pl.BlockSpec((1, 1, G), o_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),   # acc
+            pltpu.VMEM((G,), jnp.float32),     # running max
+            pltpu.VMEM((G,), jnp.float32),     # running normalizer
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(q_pos, jnp.int32),
+      jnp.asarray(page_table, jnp.int32), q, kp, vp)

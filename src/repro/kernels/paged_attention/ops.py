@@ -1,0 +1,72 @@
+"""jit'd wrapper: model layout (B,1,H,D) + pool layout -> kernel + append.
+
+Two call modes, matching how the decode paths use the gathered view today:
+
+* **append** (``k_new``/``v_new`` given): attention over the *pre-update*
+  pool plus an explicit rank-1 term for the just-projected token — the
+  paged-kernel analogue of :func:`repro.models.layers.sdpa_append`.  The
+  kernel streams the pool pages; the one extra logit is spliced into the
+  streamed softmax here in fp32 via the kernel's ``(m, l)`` state.
+* **post-update** (no ``k_new``): the token was already written into the
+  pool (hybrid local-attention layers do this); the kernel's accumulator is
+  simply normalized.  ``lengths`` then counts the new token too.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
+                    page_table: jnp.ndarray, lengths: jnp.ndarray, *,
+                    q_pos: Optional[jnp.ndarray] = None,
+                    k_new: Optional[jnp.ndarray] = None,
+                    v_new: Optional[jnp.ndarray] = None,
+                    window: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, 1, H, D); kp/vp: (n_pages, page_size, Hkv, D);
+    page_table: (B, max_pages); lengths: (B,) attendable pool tokens.
+
+    ``q_pos`` (B,) is the query's absolute position (defaults to
+    ``lengths`` — the append case, where the query sits one past the live
+    prefix); ``k_new``/``v_new`` (B, 1, Hkv, D) enable append mode.
+    Returns (B, 1, H, D) in q.dtype.
+    """
+    B, S, H, D = q.shape
+    assert S == 1, "paged_attention is a decode (S=1) kernel"
+    Hkv = kp.shape[2]
+    G = H // Hkv
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    q_pos = lengths if q_pos is None else jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 0:
+        q_pos = jnp.broadcast_to(q_pos, (B,))
+
+    qg = q.reshape(B, Hkv, G, D)
+    acc, m, l = paged_attention_kernel(qg, kp, vp, page_table, lengths,
+                                       q_pos, window=window,
+                                       interpret=interpret)
+    if k_new is not None:
+        # splice the new token's logit into the streamed softmax (fp32);
+        # round k/v through the pool dtype first so the result is consistent
+        # with the write-then-gather formulation
+        kn = k_new.astype(kp.dtype).reshape(B, 1, Hkv, D)[:, 0]     # (B,Hkv,D)
+        vn = v_new.astype(vp.dtype).reshape(B, 1, Hkv, D)[:, 0]
+        s_new = jnp.einsum("bhgd,bhd->bhg", qg.astype(jnp.float32),
+                           kn.astype(jnp.float32)) / math.sqrt(D)
+        m_tot = jnp.maximum(m, s_new)
+        alpha = jnp.exp(m - m_tot)
+        beta = jnp.exp(s_new - m_tot)
+        acc = acc * alpha[..., None] + beta[..., None] * vn[:, :, None, :].astype(jnp.float32)
+        l = l * alpha + beta
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, D).astype(q.dtype)

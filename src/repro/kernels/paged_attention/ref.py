@@ -1,0 +1,60 @@
+"""Pure-jnp oracle: the HBM gather path the kernel replaces.
+
+Gathers the slot's pages in logical order (clipped indices for unmapped
+rows, masked invalid — byte-for-byte the ``kvcache._paged_kv_view``
+construction) and runs dense fp32 softmax attention, optionally with the
+appended new token.  This *is* the reference the tentpole gates
+lane-exactness against: the kernel must match it on every mapped lane.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_paged_attention(q: jnp.ndarray, kp: jnp.ndarray,
+                              vp: jnp.ndarray, page_table: jnp.ndarray,
+                              lengths: jnp.ndarray, *,
+                              q_pos: Optional[jnp.ndarray] = None,
+                              k_new: Optional[jnp.ndarray] = None,
+                              v_new: Optional[jnp.ndarray] = None,
+                              window: Optional[int] = None) -> jnp.ndarray:
+    """Same signature/semantics as :func:`..ops.paged_attention`."""
+    B, S, H, D = q.shape
+    assert S == 1
+    n_pages, page_size, Hkv, _ = kp.shape
+    G = H // Hkv
+    max_pages = page_table.shape[1]
+    T = max_pages * page_size
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    q_pos = lengths if q_pos is None else jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 0:
+        q_pos = jnp.broadcast_to(q_pos, (B,))
+
+    pid = jnp.clip(page_table, 0, n_pages - 1)
+    k = kp[pid].reshape(B, T, Hkv, D).astype(jnp.float32)
+    v = vp[pid].reshape(B, T, Hkv, D).astype(jnp.float32)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)[None]                     # (1, T)
+    valid = jnp.repeat(page_table >= 0, page_size, axis=-1)
+    valid &= kv_pos < lengths[:, None]
+    if window is not None:
+        valid &= kv_pos > (q_pos - window)[:, None]
+
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k) / math.sqrt(D)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    if k_new is not None:
+        kn = k_new.astype(kp.dtype).reshape(B, Hkv, D).astype(jnp.float32)
+        vn = v_new.astype(vp.dtype).reshape(B, Hkv, D).astype(jnp.float32)
+        s_new = jnp.einsum("bhgd,bhd->bhg", qg, kn) / math.sqrt(D)
+        s = jnp.concatenate([s, s_new[..., None]], axis=-1)
+        v = jnp.concatenate([v, vn[:, None]], axis=1)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -18,11 +18,14 @@ VMEM scratch across the sequential L sweep.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..runtime import resolve_interpret
 
 
 def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, Q: int, bw: int):
@@ -50,7 +53,7 @@ def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, Q: int, bw: int):
 
 def rglru_scan_kernel(a: jnp.ndarray, b: jnp.ndarray, *,
                       block_q: int = 128, block_w: int = 256,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """a, b: (B, L, W) -> h: (B, L, W).  L % block_q == 0, W % block_w == 0."""
     B, L, W = a.shape
     Q = min(block_q, L)
@@ -67,5 +70,5 @@ def rglru_scan_kernel(a: jnp.ndarray, b: jnp.ndarray, *,
         out_specs=pl.BlockSpec((1, Q, bw), lambda bi, wi, ci: (bi, ci, wi)),
         out_shape=jax.ShapeDtypeStruct((B, L, W), a.dtype),
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b)

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +14,7 @@ from .kernel import rglru_scan_kernel
 @functools.partial(jax.jit, static_argnames=("block_q", "block_w", "interpret"))
 def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, *,
                block_q: int = 128, block_w: int = 256,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: Optional[bool] = None) -> jnp.ndarray:
     """a, b: (B, L, W) -> h (B, L, W); pads L and W to block multiples.
 
     Padding uses a=1, b=0 (identity recurrence) so results are unaffected.

@@ -1,0 +1,37 @@
+"""Shared kernel runtime knobs.
+
+Pallas interpret mode resolution: the kernels default to whatever the
+platform needs — compiled Mosaic on TPU, interpret (pure-JAX lowering) on
+CPU/GPU — instead of a hardcoded ``interpret=True`` that would silently run
+a TPU job through the interpreter.  ``REPRO_PALLAS_INTERPRET=0/1`` overrides
+either way (e.g. forcing interpret on TPU to bisect a Mosaic miscompile, or
+asserting compiled lowering in a unit test).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_TRUE = {"1", "true", "yes", "on"}
+_FALSE = {"0", "false", "no", "off"}
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a kernel's ``interpret`` default.
+
+    Explicit ``True``/``False`` wins; then the ``REPRO_PALLAS_INTERPRET``
+    env var; then the platform — interpret everywhere except a real TPU
+    backend, where the compiled Mosaic kernel is the point.
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get(_ENV, "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    return jax.default_backend() != "tpu"

@@ -16,11 +16,14 @@ which removes the memory-bound hot spot the roofline analysis flags.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..runtime import resolve_interpret
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
@@ -65,7 +68,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
 def ssd_scan_kernel(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                     Bm: jnp.ndarray, Cm: jnp.ndarray, *,
                     chunk: int = 128, bh: int = 8,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N) -> y like x.
 
     L % chunk == 0 and H % bh == 0 (ops.py pads/validates).
@@ -93,5 +96,5 @@ def ssd_scan_kernel(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
         out_specs=pl.BlockSpec((1, Q, bh, Pd), lambda b, hb, c: (b, c, hb, 0)),
         out_shape=jax.ShapeDtypeStruct((B, L, H, Pd), x.dtype),
         scratch_shapes=[pltpu.VMEM((bh, Pd, N), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dt, A, Bm, Cm)

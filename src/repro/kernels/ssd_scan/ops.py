@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +15,7 @@ from .kernel import ssd_scan_kernel
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, *,
              chunk: int = 128, bh: int = 8,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: Optional[bool] = None) -> jnp.ndarray:
     """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N).
 
     Pads L to a chunk multiple (dt=0 on padding => decay 1, zero input) and

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from .. import configs
 from ..data.pipeline import make_batch_specs
 from ..dist import sharding as shd
-from ..models import build_model
+from ..models import build_model, kvcache
 from ..models.config import SHAPES_BY_NAME, ArchConfig, ShapeSpec
 from ..serve.engine import make_decode_step, make_prefill
 from ..train.optim import AdamWConfig
@@ -63,6 +63,23 @@ def _extra_prefill_args(cfg: ArchConfig, shape: ShapeSpec):
     return ()
 
 
+# -- paged-kernel dispatch axis ---------------------------------------------
+# decode cells additionally lower through the fused Pallas paged-attention
+# path (`attn_backend='paged_kernel'`): the shared page pool + per-slot page
+# table replaces the ring cache, so the matrix covers BOTH decode dispatch
+# modes and a sharding regression in the pool layout shows up as a named
+# `...|paged` cell in the wire-bytes gate.
+PAGED_KERNEL_FAMILIES = ("dense", "moe", "hybrid")
+DRYRUN_PAGE_SIZE = 16
+
+
+def paged_kernel_applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    """The fused kernel serves attention layers from the paged pool: decode
+    shapes only, and only families with a KV pool (SSM decode has none;
+    audio/VLM decoders ride the encoder path, not the pool)."""
+    return shape.kind == "decode" and cfg.family in PAGED_KERNEL_FAMILIES
+
+
 # per-device microbatch token cap: 8192 keeps every train cell's transients
 # (scores, CE, MoE dispatch buffers) within HBM even under the CPU backend's
 # no-donation double-counting (§Perf cell-2 iteration 3: accum 4 -> 8 cut
@@ -85,7 +102,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                optim_cfg: AdamWConfig = AdamWConfig(),
                cfg_overrides: Optional[Dict] = None,
                policy_kw: Optional[Dict] = None,
-               donate: bool = True):
+               donate: bool = True, kernel: str = "gather"):
     """Returns (lowered, meta) for one cell."""
     cfg = configs.get(arch)
     if cfg_overrides:
@@ -93,6 +110,13 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     shape = SHAPES_BY_NAME[shape_name]
     if shape_name not in cfg.shapes:
         raise ValueError(f"{arch} skips {shape_name} (cfg.shapes={cfg.shapes})")
+    if kernel == "paged":
+        if not paged_kernel_applicable(cfg, shape):
+            raise ValueError(f"{arch} x {shape_name} has no paged-kernel "
+                             f"decode path (family={cfg.family!r})")
+        cfg = dataclasses.replace(cfg, attn_backend="paged_kernel")
+    elif kernel != "gather":
+        raise ValueError(f"kernel must be 'gather' or 'paged', got {kernel!r}")
     mesh = make_production_mesh(multi_pod=multi_pod)
     model = build_model(cfg)
     p_abs = abstract_params(model)
@@ -133,8 +157,18 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lowered = jitted.lower(p_abs, tok_abs, *extra)
         else:  # decode
             B = shape.global_batch
-            cache_abs = _sds(jax.eval_shape(
-                lambda: model.init_cache(B, shape.seq_len)))
+            if kernel == "paged":
+                # same KV capacity as the ring cell, laid out as the shared
+                # pool + page table the serving scheduler actually decodes
+                # against (exact-fit pool: B slots x max_pages each)
+                mp = -(-shape.seq_len // DRYRUN_PAGE_SIZE)
+                cache_abs = _sds(jax.eval_shape(
+                    lambda: kvcache.paged_cache(
+                        model, B, page_size=DRYRUN_PAGE_SIZE,
+                        n_pages=B * mp, max_pages=mp)))
+            else:
+                cache_abs = _sds(jax.eval_shape(
+                    lambda: model.init_cache(B, shape.seq_len)))
             c_sh = shd.cache_shardings(cache_abs, mesh)
             tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
             t_sh = shd.batch_shardings({"tokens": tok_abs}, mesh)["tokens"]
@@ -145,6 +179,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lowered = jitted.lower(p_abs, cache_abs, tok_abs)
 
     meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            **({"kernel": "paged"} if kernel == "paged" else {}),
             "mesh": "2x16x16" if multi_pod else "16x16",
             "n_chips": 512 if multi_pod else 256,
             "param_count": cfg.param_count(),
@@ -190,6 +225,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     except Exception as e:  # noqa: BLE001
         return {"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
+                **({"kernel": kw["kernel"]} if kw.get("kernel", "gather")
+                   != "gather" else {}),
                 "status": "LOWER_FAIL", "error": f"{type(e).__name__}: {e}",
                 "traceback": traceback.format_exc()[-2000:]}
     rec = dict(meta)
@@ -250,7 +287,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
-               compile_cell: bool = True, **kw):
+               compile_cell: bool = True, kernel_mode: str = "gather", **kw):
+    """``kernel_mode``: 'gather' is the classic matrix; 'paged' runs only
+    the fused paged-kernel decode cells; 'both' appends them to the classic
+    matrix (the full 84-cell artifact)."""
     results = []
     archs = archs or configs.list_archs()
     for arch in archs:
@@ -258,20 +298,32 @@ def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
         for shape_name in (shapes or cfg.shapes):
             if shape_name not in cfg.shapes:
                 continue
-            for multi_pod in ([False, True] if mesh_mode == "both"
-                              else [mesh_mode == "multi"]):
-                print(f"=== {arch} x {shape_name} x "
-                      f"{'2x16x16' if multi_pod else '16x16'} ===", flush=True)
-                rec = run_cell(arch, shape_name, multi_pod=multi_pod,
-                               compile_cell=compile_cell, **kw)
-                print(json.dumps(_summary(rec)), flush=True)
-                results.append(rec)
+            kernels = ["gather"] if kernel_mode == "gather" else ["paged"]
+            if kernel_mode == "both":
+                kernels = ["gather", "paged"]
+            for kern in kernels:
+                if kern == "paged" and not paged_kernel_applicable(
+                        cfg, SHAPES_BY_NAME[shape_name]):
+                    continue
+                for multi_pod in ([False, True] if mesh_mode == "both"
+                                  else [mesh_mode == "multi"]):
+                    tag = " [paged]" if kern == "paged" else ""
+                    print(f"=== {arch} x {shape_name} x "
+                          f"{'2x16x16' if multi_pod else '16x16'}{tag} ===",
+                          flush=True)
+                    rec = run_cell(arch, shape_name, multi_pod=multi_pod,
+                                   compile_cell=compile_cell, kernel=kern,
+                                   **kw)
+                    print(json.dumps(_summary(rec)), flush=True)
+                    results.append(rec)
     return results
 
 
 def _summary(rec: Dict) -> Dict:
     out = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status",
                                    "lower_s", "compile_s")}
+    if rec.get("kernel"):
+        out["kernel"] = rec["kernel"]
     if rec.get("status") == "OK":
         out["flops/dev"] = f"{rec['flops_per_device']:.3e}"
         mem = rec.get("memory", {})
@@ -289,20 +341,27 @@ def main() -> None:
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--kernel", default="gather",
+                    choices=["gather", "paged", "both"],
+                    help="decode dispatch axis: 'paged' lowers only the "
+                         "fused paged-attention decode cells, 'both' appends "
+                         "them to the classic matrix")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     if args.all:
-        results = run_matrix(args.mesh, compile_cell=not args.no_compile)
+        results = run_matrix(args.mesh, compile_cell=not args.no_compile,
+                             kernel_mode=args.kernel)
     else:
         if not args.arch:
             ap.error("--arch required unless --all")
         cfg = configs.get(args.arch)
         shapes = [args.shape] if args.shape else list(cfg.shapes)
         results = run_matrix(args.mesh, archs=[args.arch], shapes=shapes,
-                             compile_cell=not args.no_compile)
+                             compile_cell=not args.no_compile,
+                             kernel_mode=args.kernel)
     n_ok = sum(1 for r in results if r.get("status") == "OK")
     print(f"\n{n_ok}/{len(results)} cells OK")
     if args.out:

@@ -112,7 +112,8 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    idle_preempt_steps: int = 0,
                    prefix_sharing: bool = False,
                    park_sessions: bool = False,
-                   park_ttl_steps: int = 0) -> ServingFrontend:
+                   park_ttl_steps: int = 0,
+                   attn_backend: str = "gather") -> ServingFrontend:
     """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
 
     ``continuous`` falls back to the shared whole-batch flavour for families
@@ -144,7 +145,8 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                                 idle_preempt_steps=idle_preempt_steps,
                                 prefix_sharing=prefix_sharing,
                                 park_sessions=park_sessions,
-                                park_ttl_steps=park_ttl_steps)
+                                park_ttl_steps=park_ttl_steps,
+                                attn_backend=attn_backend)
         return ServingFrontend(cloud, scheduler=sched, batch_size=batch_size)
     if temperature or top_k:
         raise ValueError(
@@ -193,7 +195,7 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 offload: bool = False, preempt_policy: str = None,
                 idle_preempt_steps: int = 0,
                 prefix_sharing: bool = False, park_sessions: bool = False,
-                park_ttl_steps: int = 0):
+                park_ttl_steps: int = 0, attn_backend: str = "gather"):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -209,7 +211,8 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                               idle_preempt_steps=idle_preempt_steps,
                               prefix_sharing=prefix_sharing,
                               park_sessions=park_sessions,
-                              park_ttl_steps=park_ttl_steps)
+                              park_ttl_steps=park_ttl_steps,
+                              attn_backend=attn_backend)
     t0 = time.time()
     spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
                    sessions=sessions, prompt_len=prompt_len, max_new=max_new)
@@ -299,6 +302,11 @@ def main() -> None:
     ap.add_argument("--park-ttl-steps", type=int, default=0,
                     help="drop a parked session after this many scheduler "
                          "steps (0 = retain until evicted or reset)")
+    ap.add_argument("--attn-backend", default="gather",
+                    choices=["gather", "paged_kernel"],
+                    help="decode attention over the paged pool: materialize "
+                         "the gathered view in HBM (reference) or stream "
+                         "pages through the Pallas table-indirect kernel")
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
                 sessions=args.sessions, batch_size=args.batch_size,
@@ -310,7 +318,8 @@ def main() -> None:
                 idle_preempt_steps=args.idle_preempt_steps,
                 prefix_sharing=args.prefix_sharing,
                 park_sessions=args.park_sessions,
-                park_ttl_steps=args.park_ttl_steps)
+                park_ttl_steps=args.park_ttl_steps,
+                attn_backend=args.attn_backend)
 
 
 if __name__ == "__main__":

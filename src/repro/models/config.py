@@ -124,6 +124,12 @@ class ArchConfig:
     scan_layers: bool = True
     remat: str = "full"                  # none | full | dots  (hillclimb lever)
 
+    # decode attention over a paged cache: 'gather' materializes the pooled
+    # view in HBM (reference and CPU fallback), 'paged_kernel' streams pages
+    # through the Pallas table-indirect kernel (S=1 decode only; gather
+    # still serves chunked prefill and ring caches)
+    attn_backend: str = "gather"
+
     def kv_dim(self) -> int:
         return self.n_kv_heads * self.the_head_dim()
 

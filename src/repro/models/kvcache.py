@@ -162,6 +162,42 @@ def cache_kv_view(layer_cache: Dict, upto: Optional[jnp.ndarray] = None
     return layer_cache["k"], layer_cache["v"], pos, pos >= 0
 
 
+def paged_attn_decode(layer_cache: Dict, q: jnp.ndarray, pos, *,
+                      window: Optional[int] = None,
+                      k_new: Optional[jnp.ndarray] = None,
+                      v_new: Optional[jnp.ndarray] = None,
+                      include_new: bool = False) -> jnp.ndarray:
+    """Fused table-indirect decode attention over the paged pool.
+
+    The ``attn_backend='paged_kernel'`` alternative to
+    ``cache_kv_view`` + ``sdpa_append``/``sdpa``: the Pallas kernel streams
+    the slot's K/V pages straight from the pool via the scalar-prefetched
+    page table — the gathered (B, T, Hkv, D) cache never materializes in
+    HBM.  Read-only: ``_prepare_write_span`` / ``cache_update_layer`` still
+    own every pool write, so CoW splits and ``mask_slot_rows`` freezing are
+    untouched.
+
+    ``pos`` is the slot's live length pre-write (scalar or (B,)).  With
+    ``k_new``/``v_new`` the just-projected token is appended in fp32 on top
+    of the streamed softmax (the ``sdpa_append`` contract: attend the
+    PRE-update pool + a rank-1 new-token term).  With ``include_new`` the
+    token was already written into the pool (hybrid local-attention layers)
+    and lane ``pos`` itself is attended instead.  q: (B, 1, H, D).
+    """
+    from ..dist.sharding import constrain
+    from ..kernels.paged_attention import paged_attention
+
+    kp, vp, pt = layer_cache["kp"], layer_cache["vp"], layer_cache["page_table"]
+    B = q.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    lengths = pos + 1 if include_new else pos
+    out = paged_attention(q, kp, vp, pt, lengths, q_pos=pos, window=window,
+                          k_new=k_new, v_new=v_new)
+    return constrain(out, "attn_out")
+
+
 def _paged_kv_view(layer_cache: Dict, upto) -> Tuple[jnp.ndarray, ...]:
     kp, vp, pt = layer_cache["kp"], layer_cache["vp"], layer_cache["page_table"]
     n_pages, page_size, n_kv, head_dim = kp.shape[-4:]

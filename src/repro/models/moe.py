@@ -319,7 +319,13 @@ class MoELM(DenseLM):
         h = layers.apply_norm(cfg.norm, p["attn_norm"], x)
         q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
         new_cache = kvcache.cache_update_layer(layer_cache, k, v, pos)
-        if S == 1:  # write-only cache update + append-attention (§Perf cell 3)
+        if (S == 1 and cfg.attn_backend == "paged_kernel"
+                and kvcache.is_paged(layer_cache)):
+            # fused table-indirect kernel: pre-update pool + fp32 append
+            o = kvcache.paged_attn_decode(layer_cache, q, pos,
+                                          window=cfg.sliding_window,
+                                          k_new=k, v_new=v)
+        elif S == 1:  # write-only cache update + append-attention (§Perf cell 3)
             ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache, upto=pos)
             o = layers.sdpa_append(q, ck, cv, k, v, window=cfg.sliding_window,
                                    q_positions=positions, kv_positions=kv_pos,

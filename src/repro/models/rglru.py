@@ -182,6 +182,13 @@ def _layer_step(p: Dict, cfg: ArchConfig, kind: str, x: jnp.ndarray,
             if S > kvcache.cache_capacity(lc):  # prefill longer than the ring window
                 o = layers.sdpa(q, k, v, causal=True, window=cfg.hybrid.local_window,
                                 q_positions=positions, kv_positions=positions)
+            elif (S == 1 and cfg.attn_backend == "paged_kernel"
+                  and kvcache.is_paged(lc)):
+                # fused table-indirect kernel over the POST-update pool (the
+                # token is already written; lane ``pos`` itself is attended)
+                o = kvcache.paged_attn_decode(new_lc, q, pos,
+                                              window=cfg.hybrid.local_window,
+                                              include_new=True)
             else:
                 ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_lc, upto=pos + S)
                 o = layers.sdpa(q, ck, cv, causal=True, window=cfg.hybrid.local_window,

@@ -70,6 +70,13 @@ def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
         # keeps the trailing window, so attend the fresh full-sequence k/v.
         o = layers.sdpa(q, k, v, causal=True, window=cfg.sliding_window,
                         q_positions=positions, kv_positions=positions)
+    elif S == 1 and cfg.attn_backend == "paged_kernel" and kvcache.is_paged(layer_cache):
+        # fused path: stream the slot's pages via the table-indirect Pallas
+        # kernel (pre-update pool + fp32 new-token append) — the gathered
+        # cache never materializes in HBM.
+        o = kvcache.paged_attn_decode(layer_cache, q, pos,
+                                      window=cfg.sliding_window,
+                                      k_new=k, v_new=v)
     elif S == 1:
         # steady-state decode: attend the PRE-update cache + an explicit
         # new-token term; the updated ring is written but never re-read.

@@ -102,6 +102,7 @@ chunks.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -197,13 +198,32 @@ class DecodeScheduler:
                  blob_store: Optional[PageBlobStore] = None,
                  prefix_sharing: bool = False,
                  park_sessions: bool = False,
-                 park_ttl_steps: int = 0):
+                 park_ttl_steps: int = 0,
+                 attn_backend: str = "gather"):
         if not supports_continuous(model.cfg):
             raise ValueError(
                 f"family {model.cfg.family!r} has no per-slot decode path; "
                 f"continuous batching supports {CONTINUOUS_FAMILIES}")
         if kv_mode not in ("paged", "ring"):
             raise ValueError(f"kv_mode must be 'paged' or 'ring', got {kv_mode!r}")
+        if attn_backend not in ("gather", "paged_kernel"):
+            raise ValueError("attn_backend must be 'gather' or 'paged_kernel', "
+                             f"got {attn_backend!r}")
+        if attn_backend == "paged_kernel":
+            if kv_mode != "paged":
+                raise ValueError(
+                    "attn_backend='paged_kernel' streams the shared page pool "
+                    "through the Pallas kernel; it needs kv_mode='paged'")
+            if model.cfg.family == "ssm":
+                raise ValueError("attn_backend='paged_kernel' needs attention "
+                                 "layers; SSM decode has no KV pool")
+            # rebind a copy so a gather-mode scheduler sharing this model
+            # object keeps the reference dispatch (cfg drives the decode
+            # paths' backend branch at trace time)
+            model = copy.copy(model)
+            model.cfg = dataclasses.replace(model.cfg,
+                                            attn_backend="paged_kernel")
+        self.attn_backend = attn_backend
         if preempt_policy is None:
             preempt_policy = "pressure" if offload else "none"
         if preempt_policy not in PREEMPT_POLICIES:
@@ -1278,6 +1298,7 @@ class DecodeScheduler:
             "admitted": self.admitted,
             "completed": self.completed,
             "kv_mode": self.kv_mode,
+            "attn_backend": self.attn_backend,
         }
         if self.kv_mode == "paged":
             out["prefill_chunks"] = self.prefill_chunks

@@ -9,6 +9,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention, reference_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           reference_paged_attention)
 from repro.kernels.rglru_scan import reference_rglru, rglru_scan
 from repro.kernels.ssd_scan import reference_ssd, ssd_scan
 
@@ -17,6 +19,28 @@ ATOL = {jnp.float32: 2e-4, jnp.bfloat16: 3e-2}
 
 def _tol(dtype):
     return dict(atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+def paged_inputs(seed, B, Hkv, G, D, ps, mp, n_pages, dtype,
+                 fill=0.8, holes=0):
+    """Random pool + per-slot tables: scrambled physical pages, ragged live
+    lengths, optional unmapped (-1) holes punched below the live length."""
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q = jax.random.normal(ks[0], (B, 1, Hkv * G, D), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, ps, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, ps, Hkv, D), dtype)
+    k_new = jax.random.normal(ks[3], (B, 1, Hkv, D), dtype)
+    v_new = jax.random.normal(ks[4], (B, 1, Hkv, D), dtype)
+    lengths = rng.integers(1, max(2, int(mp * ps * fill)), size=B)
+    pt = np.full((B, mp), -1, np.int32)
+    for b in range(B):
+        need = -(-int(lengths[b]) // ps)
+        pt[b, :need] = rng.choice(n_pages, size=need, replace=False)
+        for _ in range(holes):
+            pt[b, rng.integers(0, mp)] = -1
+    return (q, kp, vp, jnp.asarray(pt), jnp.asarray(lengths, jnp.int32),
+            k_new, v_new)
 
 
 # -- flash attention ------------------------------------------------------------
@@ -59,6 +83,78 @@ def test_flash_attention_matches_model_sdpa():
     want = sdpa(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
                                atol=2e-4, rtol=2e-4)
+
+
+# -- paged attention -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hkv,G,D,ps,mp,n_pages,holes", [
+    (1, 1, 1, 8, 4, 4, 8, 0),      # MQA/MHA minimal
+    (3, 2, 3, 16, 8, 6, 32, 1),    # GQA, scrambled pages + a hole per slot
+    (2, 4, 2, 32, 16, 8, 64, 2),   # wider pool, more holes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 12])
+def test_paged_attention_append_sweep(B, Hkv, G, D, ps, mp, n_pages, holes,
+                                      dtype, window):
+    q, kp, vp, pt, lengths, k_new, v_new = paged_inputs(
+        B * 7 + mp, B, Hkv, G, D, ps, mp, n_pages, dtype, holes=holes)
+    out = paged_attention(q, kp, vp, pt, lengths, k_new=k_new, v_new=v_new,
+                          window=window)
+    ref = reference_paged_attention(q, kp, vp, pt, lengths, k_new=k_new,
+                                    v_new=v_new, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_post_update_sweep(dtype):
+    """No-append mode (hybrid layers: the token is already in the pool) —
+    the query sits at the last live lane."""
+    B, Hkv, G, D, ps, mp = 3, 2, 2, 16, 8, 5
+    q, kp, vp, pt, lengths, _, _ = paged_inputs(
+        11, B, Hkv, G, D, ps, mp, 24, dtype, holes=1)
+    out = paged_attention(q, kp, vp, pt, lengths, q_pos=lengths - 1,
+                          window=8)
+    ref = reference_paged_attention(q, kp, vp, pt, lengths,
+                                    q_pos=lengths - 1, window=8)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_matches_model_gather_path():
+    """Kernel == the gather formulation the decode paths use today:
+    ``cache_kv_view`` (logical-order page gather) + ``sdpa_append``."""
+    from repro.models import kvcache
+    from repro.models.layers import sdpa_append
+
+    B, Hkv, G, D, ps, mp = 2, 2, 4, 16, 4, 6
+    q, kp, vp, pt, lengths, k_new, v_new = paged_inputs(
+        3, B, Hkv, G, D, ps, mp, 16, jnp.float32, holes=1)
+    got = paged_attention(q, kp, vp, pt, lengths, k_new=k_new, v_new=v_new)
+    lc = {"kp": kp, "vp": vp, "page_table": pt}
+    ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(lc, upto=lengths)
+    want = sdpa_append(q, ck, cv, k_new, v_new, window=None,
+                       q_positions=kvcache.decode_positions(lengths, B, 1),
+                       kv_positions=kv_pos, kv_valid=kv_valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_paged_attention_fully_unmapped_slot():
+    """A slot with zero mapped pages must fall back to the new token alone
+    (softmax over one logit), not NaN."""
+    B, Hkv, G, D, ps, mp = 2, 1, 2, 8, 4, 3
+    q, kp, vp, pt, _, k_new, v_new = paged_inputs(
+        5, B, Hkv, G, D, ps, mp, 8, jnp.float32)
+    pt = pt.at[1].set(-1)
+    lengths = jnp.asarray([6, 0], jnp.int32)
+    out = paged_attention(q, kp, vp, pt, lengths, k_new=k_new, v_new=v_new)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(
+        np.asarray(out)[1, 0].reshape(Hkv, G, D),
+        np.broadcast_to(np.asarray(v_new)[1, 0][:, None, :], (Hkv, G, D)),
+        atol=1e-6, rtol=1e-6)
 
 
 # -- ssd scan --------------------------------------------------------------------

@@ -345,9 +345,10 @@ def test_paged_cache_shardings_resolve_on_16x16():
     specs = sched.cache_specs
     # pool (L, Np, ps, H, D): shared across slots -> replicated over data;
     # the reduced config's 4 kv heads don't divide model=16, so the guard
-    # falls back to the page dim
+    # falls back to the within-page lane dim (never the page dim — the
+    # kernel's table-indirect page slices would all-gather the pool)
     assert all(e is None or e == "model" for e in specs["kp"])
-    assert specs["kp"][1] == "model"
+    assert specs["kp"][2] == "model" and specs["kp"][1] is None
     # page table (L, n_slots, max_pages): slot batch on data
     assert specs["page_table"][1] == ("data",)
 

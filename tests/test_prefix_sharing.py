@@ -561,8 +561,9 @@ def test_frontend_bills_park_retention():
 
 def test_shared_pool_specs_survive_sharing():
     """Sharing never changes pool placement: pages have no slot axis, so
-    the shared pool keeps heads on ``model`` (replicated over dp) with the
-    prefix index on."""
+    the shared pool keeps its within-page lane dim on ``model`` (replicated
+    over dp — the paged kernel's per-(page, head) block slices stay local)
+    with the prefix index on."""
     from jax.sharding import AbstractMesh
 
     cfg, model, params = tiny("qwen3-14b")
@@ -573,5 +574,6 @@ def test_shared_pool_specs_survive_sharing():
     specs = sched.cache_specs
     assert specs is not None
     kp = specs["layers"]["kp"] if "layers" in specs else specs["kp"]
-    assert kp[-2] == "model" and all(e is None for e in kp[:-2])
+    assert kp[-3] == "model"
+    assert all(e is None for e in kp[:-3] + kp[-2:])
     assert sched.stage_specs is not None
