@@ -98,9 +98,9 @@ def run() -> Dict:
     cloud, svc = make_service(seed=10)
     client = svc.connect_sync("meter")
     client.create("/m", b"x")
-    for i in range(100):
+    for _i in range(100):
         client.set_data("/m", b"y" * 1024)
-    for i in range(900):
+    for _i in range(900):
         client.get_data("/m")
     metered = svc.cost_summary()
     modeled = 100 * model.cost_write(1.0) + 900 * model.cost_read(1.0)

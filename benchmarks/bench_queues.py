@@ -38,7 +38,7 @@ def _bench_latency(n: int = 500) -> List[Dict]:
         fn = runtime.wrap("probe", body)
         if label == "direct invoke":
             def driver():
-                for i in range(n):
+                for _i in range(n):
                     t0 = cloud.now
                     task = cloud.spawn(fn([None]), name="direct",
                                        delay=cloud.sample("direct_invoke"))

@@ -38,7 +38,7 @@ def run(n: int = 100) -> Dict:
         samples = {"s3": [], "ddb": [], "zk": []}
 
         def reader():
-            for i in range(n):
+            for _i in range(n):
                 t0 = cloud.now
                 yield from obj.get("/node")
                 samples["s3"].append(cloud.now - t0)

@@ -26,14 +26,14 @@ def run(n: int = 60) -> Dict:
         payload = b"x" * int(size_kb * 1024)
         client.create("/bench", b"init")
 
-        for i in range(n):
+        for _i in range(n):
             client.set_data("/bench", payload)
         zk_cloud = SimCloud(seed=7)
         zk = ZooKeeperModel(zk_cloud)
         zk_samples = []
 
         def zk_driver():
-            for i in range(n):
+            for _i in range(n):
                 t0 = zk_cloud.now
                 yield from zk.write("/bench", payload)
                 zk_samples.append(zk_cloud.now - t0)

@@ -43,7 +43,7 @@ def main() -> None:
     alice.create("/election/cand-", b"", ephemeral=True, sequence=True)
     bob.create("/election/cand-", b"", ephemeral=True, sequence=True)
     children, _ = alice.get_children("/election")
-    leader = sorted(children)[0]
+    leader = min(children)
     print(f"candidates {children} -> leader {leader}")
 
     # -- scale-to-zero economics ---------------------------------------------------

@@ -1,0 +1,29 @@
+"""Repo-aware static analysis for the repro codebase.
+
+The runtime guards (``PageAllocator`` refcount audits, ``Slot.to``'s
+transition table, the randomized scheduler differential harness) catch
+invariant violations long after the commit that introduced them.  This
+package moves those checks to lint time: an AST/CFG engine plus five
+passes that understand *this repo's* invariants — jit purity, allocator
+discipline, slot-lifecycle writes, Pallas kernel hygiene, and sharding
+axis names.
+
+Run ``python -m repro.analysis [paths]``; suppress an intentional finding
+with ``# repro: allow(<rule>) -- <reason>`` on (or directly above) the
+flagged line.
+"""
+
+from .engine import (Finding, Module, RepoContext, Report, Rule, analyze,
+                     default_rules, render_json, render_text)
+
+__all__ = [
+    "Finding",
+    "Module",
+    "RepoContext",
+    "Report",
+    "Rule",
+    "analyze",
+    "default_rules",
+    "render_json",
+    "render_text",
+]

@@ -1,0 +1,63 @@
+"""CLI: ``python -m repro.analysis [paths] [--json] [--rules a,b]``.
+
+Exit code 0 when every finding is suppressed (or none exist), 1 when
+unsuppressed findings remain, 2 on usage errors.  ``--json`` emits the
+machine-readable report the CI job archives as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .engine import analyze, default_rules, render_json, render_text
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-aware static analysis (jit purity, allocator "
+                    "discipline, slot lifecycle, Pallas kernel hygiene, "
+                    "sharding axis registry)")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files or directories to scan (default: src/)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the JSON report instead of text")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule ids to run (default: all)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table and exit")
+    parser.add_argument("--verbose", action="store_true",
+                        help="also show suppressed findings (text mode)")
+    args = parser.parse_args(argv)
+
+    rules = default_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id}: {r.summary}")
+        return 0
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = wanted - {r.id for r in rules}
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in wanted]
+
+    paths = args.paths or (["src"] if Path("src").is_dir() else ["."])
+    missing = [p for p in paths if not Path(p).exists()]
+    if missing:
+        print(f"no such path: {', '.join(missing)}", file=sys.stderr)
+        return 2
+    report = analyze(paths, rules=rules)
+    if args.json:
+        print(render_json(report))
+    else:
+        print(render_text(report, verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

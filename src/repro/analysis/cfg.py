@@ -1,0 +1,153 @@
+"""A small statement-level control-flow graph for intra-function path
+queries (the allocator-discipline pass asks "can this alloc reach the
+function exit without passing a release/ownership transfer?").
+
+Statements are the nodes; edges are split into *normal* successors and
+*exceptional* successors (try-body statement -> handler entry).  The
+split matters: an ``alloc()`` call that raises allocated nothing, so the
+leak query must not follow the exception edge out of the alloc statement
+itself, but must follow it out of every later statement.
+
+Loops are treated as may-exit (the back edge and the fall-through edge
+both exist, even for ``while True``); ``finally`` bodies are threaded
+between a block and its continuation.  This is deliberately conservative
+in the direction that surfaces *more* paths, which is the safe bias for
+a leak checker.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+EXIT = "<exit>"
+
+
+class CFG:
+    def __init__(self, func: ast.AST):
+        self.func = func
+        self.succ: Dict[int, List[object]] = {}
+        self.exc: Dict[int, List[object]] = {}
+        body = getattr(func, "body", [])
+        self._loops: List[dict] = []
+        self._handlers: List[List[ast.AST]] = []
+        self._finals: List[object] = []
+        self._build_seq(body, EXIT)
+
+    # -- construction ----------------------------------------------------
+
+    def _entry(self, stmts: List[ast.stmt], follow: object) -> object:
+        return stmts[0] if stmts else follow
+
+    def _build_seq(self, stmts: List[ast.stmt], follow: object) -> None:
+        for i, stmt in enumerate(stmts):
+            nxt = self._entry(stmts[i + 1:], follow)
+            self._build_stmt(stmt, nxt)
+
+    def _add(self, table: Dict[int, List[object]], node: ast.AST,
+             dst: object) -> None:
+        table.setdefault(id(node), []).append(dst)
+
+    def _build_stmt(self, stmt: ast.stmt, follow: object) -> None:
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            # raises unwind to the innermost enclosing handler if any;
+            # returns (and unhandled raises) pass through the innermost
+            # finally on their way out of the function
+            if isinstance(stmt, ast.Raise) and self._handlers and self._handlers[-1]:
+                for h in self._handlers[-1]:
+                    self._add(self.succ, stmt, h)
+            elif self._finals:
+                self._add(self.succ, stmt, self._finals[-1])
+            else:
+                self._add(self.succ, stmt, EXIT)
+        elif isinstance(stmt, ast.Break):
+            self._add(self.succ, stmt, self._loops[-1]["break"]
+                      if self._loops else EXIT)
+        elif isinstance(stmt, ast.Continue):
+            self._add(self.succ, stmt, self._loops[-1]["continue"]
+                      if self._loops else EXIT)
+        elif isinstance(stmt, ast.If):
+            self._add(self.succ, stmt, self._entry(stmt.body, follow))
+            self._add(self.succ, stmt, self._entry(stmt.orelse, follow))
+            self._build_seq(stmt.body, follow)
+            self._build_seq(stmt.orelse, follow)
+        elif isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            self._add(self.succ, stmt, self._entry(stmt.body, stmt))
+            self._add(self.succ, stmt,
+                      self._entry(stmt.orelse, follow) if stmt.orelse
+                      else follow)
+            self._loops.append({"break": follow, "continue": stmt})
+            self._build_seq(stmt.body, stmt)
+            self._loops.pop()
+            self._build_seq(stmt.orelse, follow)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self._add(self.succ, stmt, self._entry(stmt.body, follow))
+            self._build_seq(stmt.body, follow)
+        elif isinstance(stmt, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+            after = follow
+            if stmt.finalbody:
+                after = self._entry(stmt.finalbody, follow)
+                self._build_seq(stmt.finalbody, follow)
+                self._finals.append(after)
+            handler_entries = [self._entry(h.body, after)
+                               for h in stmt.handlers if h.body]
+            body_follow = (self._entry(stmt.orelse, after) if stmt.orelse
+                           else after)
+            self._add(self.succ, stmt, self._entry(stmt.body, body_follow))
+            self._handlers.append(handler_entries)
+            self._build_seq(stmt.body, body_follow)
+            # every try-body statement may transfer to any handler
+            for s in stmt.body:
+                for node in self._stmts_in(s):
+                    for h in handler_entries:
+                        self._add(self.exc, node, h)
+                    if stmt.finalbody and not handler_entries:
+                        self._add(self.exc, node, after)
+            self._handlers.pop()
+            for h in stmt.handlers:
+                self._build_seq(h.body, after)
+            self._build_seq(stmt.orelse, after)
+            if stmt.finalbody:
+                self._finals.pop()
+        else:
+            self._add(self.succ, stmt, follow)
+
+    def _stmts_in(self, stmt: ast.stmt) -> Iterable[ast.stmt]:
+        yield stmt
+        for child in ast.walk(stmt):
+            if isinstance(child, ast.stmt) and child is not stmt:
+                # don't descend into nested function/class bodies
+                if not isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef, ast.ClassDef)):
+                    yield child
+
+    # -- queries ---------------------------------------------------------
+
+    def escaping_path(self, start: ast.stmt, consumers: Set[int],
+                      *, follow_start_exc: bool = False) -> Optional[object]:
+        """If some path from ``start`` reaches the function exit without
+        passing through a consumer statement, return the last node on it
+        (EXIT, or the Return/Raise that left).  None if every path is
+        covered.  ``start`` itself is never counted as a consumer and its
+        exception edge is skipped unless ``follow_start_exc``."""
+        seen: Set[int] = set()
+        stack: List[object] = [start]
+        prev: Dict[int, object] = {}
+        while stack:
+            node = stack.pop()
+            if node is EXIT:
+                p = prev.get(id(EXIT))
+                return p if p is not None else EXIT
+            if id(node) in seen:
+                continue
+            seen.add(id(node))
+            if node is not start and id(node) in consumers:
+                continue
+            edges = list(self.succ.get(id(node), []))
+            if node is not start or follow_start_exc:
+                edges += self.exc.get(id(node), [])
+            for nxt in edges:
+                if id(nxt) not in seen or nxt is EXIT:
+                    prev[id(nxt) if nxt is not EXIT else id(EXIT)] = node
+                    stack.append(nxt)
+        return None

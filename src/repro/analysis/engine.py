@@ -1,0 +1,391 @@
+"""Core of the static-analysis suite: findings, suppression pragmas, the
+module loader, repo-invariant context, and the rule driver.
+
+Design notes
+------------
+* Everything is AST-level — no target module is ever imported, so the
+  analyzer can run on broken or heavyweight code (and on test fixtures
+  that would not import at all).
+* Repo invariants (the ``SlotState`` transition table, the mesh-axis
+  registry) are parsed out of the defining modules' ASTs at startup, so
+  the passes track the source of truth instead of a copied constant.
+* Suppression is per-line and per-rule: ``# repro: allow(<rule>) -- <reason>``
+  on the flagged line, or alone on the line directly above it.  A pragma
+  without a reason does not suppress — it is itself reported, so every
+  waiver in the tree carries a justification.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro:\s*allow\(\s*(?P<rules>[\w\-*,\s]+?)\s*\)"
+    r"(?:\s*--\s*(?P<reason>\S.*?))?\s*$")
+
+PRAGMA_RULE = "pragma"          # meta-rule id for malformed pragmas
+PARSE_RULE = "parse-error"      # meta-rule id for unparsable files
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: rule id + location + message (stable sort order)."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    reason: Optional[str] = None    # pragma justification when suppressed
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+@dataclasses.dataclass
+class _Pragma:
+    rules: Set[str]
+    reason: Optional[str]
+    line: int
+    own_line: bool      # comment-only line: also covers the next line
+    used: bool = False
+
+
+class Module:
+    """A parsed source file plus its pragma table and parent links."""
+
+    def __init__(self, path: Path, source: str, rel: Optional[str] = None):
+        self.path = path
+        self.rel = rel or str(path)
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                child._repro_parent = parent  # type: ignore[attr-defined]
+        self.pragmas: Dict[int, _Pragma] = self._scan_pragmas()
+
+    @property
+    def dotted_name(self) -> Optional[str]:
+        """``repro.serve.scheduler`` for files under a ``repro`` package."""
+        parts = list(self.path.parts)
+        if "repro" not in parts:
+            return None
+        i = parts.index("repro")
+        tail = parts[i:]
+        tail[-1] = tail[-1].rsplit(".", 1)[0]
+        if tail[-1] == "__init__":
+            tail.pop()
+        return ".".join(tail)
+
+    def _scan_pragmas(self) -> Dict[int, _Pragma]:
+        out: Dict[int, _Pragma] = {}
+        for lineno, text in enumerate(self.lines, start=1):
+            if "repro:" not in text:
+                continue
+            m = PRAGMA_RE.search(text)
+            if m is None:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+            own = text.lstrip().startswith("#")
+            out[lineno] = _Pragma(rules=rules, reason=m.group("reason"),
+                                  line=lineno, own_line=own)
+        return out
+
+    def pragma_for(self, rule: str, line: int) -> Optional[_Pragma]:
+        """The pragma suppressing ``rule`` at ``line``, if any (and valid)."""
+        for cand_line in (line, line - 1):
+            p = self.pragmas.get(cand_line)
+            if p is None or (cand_line != line and not p.own_line):
+                continue
+            if (rule in p.rules or "*" in p.rules) and p.reason:
+                return p
+        return None
+
+    def parents(self, node: ast.AST) -> Iterable[ast.AST]:
+        while True:
+            node = getattr(node, "_repro_parent", None)
+            if node is None:
+                return
+            yield node
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local name -> fully qualified module/object it refers to."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            base = ("." * node.level) + node.module
+            for a in node.names:
+                out[a.asname or a.name] = f"{base}.{a.name}"
+    return out
+
+
+class RepoContext:
+    """Repo invariants the passes consult, parsed from the defining modules.
+
+    ``transitions``/``states`` come from ``serve/lifecycle.py``'s
+    ``TRANSITIONS`` / ``SlotState``; ``mesh_axes`` from ``dist/sharding.py``'s
+    ``MESH_AXES``.  Tests may construct one directly with literals.
+    """
+
+    def __init__(self, *,
+                 states: Optional[Set[str]] = None,
+                 transitions: Optional[Dict[str, Set[str]]] = None,
+                 mesh_axes: Optional[Set[str]] = None,
+                 lifecycle_path: Optional[Path] = None,
+                 sharding_path: Optional[Path] = None):
+        pkg = Path(__file__).resolve().parents[1]
+        self.lifecycle_path = lifecycle_path or pkg / "serve" / "lifecycle.py"
+        self.sharding_path = sharding_path or pkg / "dist" / "sharding.py"
+        if states is None or transitions is None:
+            states_p, transitions_p = _parse_lifecycle(self.lifecycle_path)
+            states = states if states is not None else states_p
+            transitions = transitions if transitions is not None else transitions_p
+        self.states = states
+        self.transitions = transitions
+        if mesh_axes is None:
+            mesh_axes = _parse_mesh_axes(self.sharding_path)
+        self.mesh_axes = mesh_axes
+
+    def is_edge(self, src: str, dst: str) -> bool:
+        return dst in self.transitions.get(src, set())
+
+    @property
+    def destinations(self) -> Set[str]:
+        out: Set[str] = set()
+        for dsts in self.transitions.values():
+            out |= dsts
+        return out
+
+
+def _parse_lifecycle(path: Path) -> Tuple[Set[str], Dict[str, Set[str]]]:
+    states: Set[str] = set()
+    transitions: Dict[str, Set[str]] = {}
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return states, transitions
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "SlotState":
+            for stmt in node.body:
+                if isinstance(stmt, ast.Assign):
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Name):
+                            states.add(tgt.id)
+        tgt = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, value = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            tgt, value = node.target, node.value
+        if (tgt is not None and isinstance(tgt, ast.Name)
+                and tgt.id == "TRANSITIONS" and isinstance(value, ast.Dict)):
+            for k, v in zip(value.keys, value.values, strict=True):
+                src = _slotstate_member(k)
+                if src is None:
+                    continue
+                dsts = set()
+                if isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+                    for el in v.elts:
+                        d = _slotstate_member(el)
+                        if d is not None:
+                            dsts.add(d)
+                transitions[src] = dsts
+    return states, transitions
+
+
+def _slotstate_member(node: Optional[ast.AST]) -> Optional[str]:
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "SlotState"):
+        return node.attr
+    return None
+
+
+def _parse_mesh_axes(path: Path) -> Set[str]:
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return set()
+    for node in ast.walk(tree):
+        targets: list = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        else:
+            continue
+        for tgt in targets:
+            if (isinstance(tgt, ast.Name) and tgt.id == "MESH_AXES"
+                    and isinstance(node.value, (ast.Tuple, ast.List))):
+                return {el.value for el in node.value.elts
+                        if isinstance(el, ast.Constant)
+                        and isinstance(el.value, str)}
+    return set()
+
+
+class Rule:
+    """One analysis pass.  Subclasses set ``id``/``summary`` and implement
+    ``check``; ``prepare`` (optional) sees the whole module set first, for
+    cross-module facts like jit roots spelled as ``module.function``."""
+
+    id: str = "<abstract>"
+    summary: str = ""
+
+    def prepare(self, modules: Sequence[Module], ctx: RepoContext) -> None:
+        pass
+
+    def check(self, module: Module, ctx: RepoContext) -> List[Finding]:
+        raise NotImplementedError
+
+
+def default_rules() -> List[Rule]:
+    from .rules import build_rules
+    return build_rules()
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]         # active (unsuppressed)
+    suppressed: List[Finding]       # waived by a valid pragma
+    files: List[str]
+    rules: List[Rule]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts))
+        elif p.suffix == ".py":
+            out.append(p)
+    seen: Set[Path] = set()
+    uniq = []
+    for p in out:
+        r = p.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(p)
+    return uniq
+
+
+def analyze(paths: Sequence, *, rules: Optional[Sequence[Rule]] = None,
+            ctx: Optional[RepoContext] = None) -> Report:
+    """Run ``rules`` over every ``.py`` under ``paths``."""
+    rules = list(rules) if rules is not None else default_rules()
+    ctx = ctx or RepoContext()
+    files = iter_py_files([Path(p) for p in paths])
+    modules: List[Module] = []
+    findings: List[Finding] = []
+    for f in files:
+        try:
+            modules.append(Module(f, f.read_text()))
+        except SyntaxError as e:
+            findings.append(Finding(PARSE_RULE, str(f), e.lineno or 1,
+                                    e.offset or 0, f"cannot parse: {e.msg}"))
+        except UnicodeDecodeError:
+            findings.append(Finding(PARSE_RULE, str(f), 1, 0,
+                                    "cannot decode as utf-8"))
+    for rule in rules:
+        rule.prepare(modules, ctx)
+    for mod in modules:
+        for rule in rules:
+            findings.extend(rule.check(mod, ctx))
+        findings.extend(_malformed_pragmas(mod))
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    by_module = {m.rel: m for m in modules}
+    for f in sorted(findings, key=Finding.sort_key):
+        mod = by_module.get(f.path)
+        pragma = mod.pragma_for(f.rule, f.line) if mod else None
+        if pragma is not None:
+            pragma.used = True
+            suppressed.append(dataclasses.replace(f, reason=pragma.reason))
+        else:
+            active.append(f)
+    # a pragma that suppressed nothing is stale — flag it so waivers don't
+    # outlive the code they excused (the meta-finding is itself waivable)
+    for mod in modules:
+        for p in mod.pragmas.values():
+            if p.reason and not p.used and not (p.rules & {PRAGMA_RULE}):
+                f = Finding(PRAGMA_RULE, mod.rel, p.line, 0,
+                            "stale pragma: suppresses nothing on this line")
+                if mod.pragma_for(PRAGMA_RULE, p.line):
+                    suppressed.append(dataclasses.replace(
+                        f, reason=mod.pragma_for(PRAGMA_RULE, p.line).reason))
+                else:
+                    active.append(f)
+    active.sort(key=Finding.sort_key)
+    return Report(findings=active, suppressed=suppressed,
+                  files=[m.rel for m in modules], rules=rules)
+
+
+def _malformed_pragmas(mod: Module) -> List[Finding]:
+    out = []
+    for p in mod.pragmas.values():
+        if not p.reason:
+            out.append(Finding(
+                PRAGMA_RULE, mod.rel, p.line, 0,
+                "suppression pragma needs a justification: "
+                "# repro: allow(<rule>) -- <reason>"))
+    return out
+
+
+def render_text(report: Report, *, verbose: bool = False) -> str:
+    lines = [f.render() for f in report.findings]
+    if verbose and report.suppressed:
+        lines.append("-- suppressed --")
+        lines.extend(f"{f.render()}  (allowed: {f.reason})"
+                     for f in report.suppressed)
+    lines.append(
+        f"{len(report.files)} file(s), {len(report.findings)} finding(s), "
+        f"{len(report.suppressed)} suppressed")
+    return "\n".join(lines)
+
+
+def render_json(report: Report) -> str:
+    def enc(f: Finding) -> dict:
+        d = {"rule": f.rule, "path": f.path, "line": f.line, "col": f.col,
+             "message": f.message}
+        if f.reason is not None:
+            d["reason"] = f.reason
+        return d
+
+    doc = {
+        "version": 1,
+        "tool": "repro.analysis",
+        "rules": [{"id": r.id, "summary": r.summary} for r in report.rules],
+        "files_scanned": len(report.files),
+        "findings": [enc(f) for f in report.findings],
+        "suppressed": [enc(f) for f in report.suppressed],
+        "ok": report.ok,
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

@@ -1,0 +1,22 @@
+"""Rule registry: the five repo-specific passes, in stable order."""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..engine import Rule
+from .allocator import AllocatorDisciplineRule
+from .jit_purity import JitPurityRule
+from .kernel import KernelRules
+from .lifecycle import LifecycleRule
+from .sharding import ShardingRegistryRule
+
+
+def build_rules() -> List[Rule]:
+    return [
+        JitPurityRule(),
+        AllocatorDisciplineRule(),
+        LifecycleRule(),
+        KernelRules(),
+        ShardingRegistryRule(),
+    ]

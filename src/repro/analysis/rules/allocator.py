@@ -1,0 +1,227 @@
+"""allocator-discipline: every ``PageAllocator.alloc``/``share`` must be
+followed, on *every* CFG path to the function exit, by a release or an
+ownership transfer (recording the pages in a slot/table/attribute,
+returning them, or handing them to a callee).
+
+The runtime ``audit()`` catches a leaked page only when the ledger is
+next validated — typically steps after the leak, in a different request's
+stack.  Statically, a leak is simply an escaping CFG path, and the most
+common shape is the exception path: ``alloc`` succeeds, a later statement
+in the ``try`` raises, the handler returns without releasing.
+
+``free()`` calls on an allocator are flagged unconditionally: on a
+refcounted pool only ``release`` (drop one reference) is safe against
+CoW-shared pages; ``free`` reads as an unconditional drop even where it
+aliases ``release`` today.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..cfg import CFG, EXIT
+from ..engine import Finding, Module, RepoContext, Rule, dotted
+
+RULE_ID = "allocator-discipline"
+
+# builtin callees that only *read* their argument: passing the tracked
+# pages to these is not an ownership transfer
+_READERS = {"len", "range", "enumerate", "sorted", "reversed", "min", "max",
+            "sum", "any", "all", "zip", "iter", "next", "repr", "str",
+            "print", "bool", "id", "isinstance", "frozenset"}
+
+
+def _is_allocator(recv: Optional[str]) -> bool:
+    if recv is None:
+        return False
+    last = recv.split(".")[-1]
+    return last.endswith("allocator") or last == "pool_allocator"
+
+
+class AllocatorDisciplineRule(Rule):
+    id = RULE_ID
+    summary = ("alloc/share results must reach a release or ownership "
+               "transfer on every CFG path (no exception-path page leaks); "
+               "never free() a refcounted page")
+
+    def check(self, module: Module, ctx: RepoContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for fn in ast.walk(module.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(self._check_function(module, fn))
+        return findings
+
+    def _check_function(self, module: Module,
+                        fn: ast.AST) -> List[Finding]:
+        out: List[Finding] = []
+        allocs = []     # (stmt, var or None, call node, kind)
+        stmts = [n for n in ast.walk(fn) if isinstance(n, ast.stmt)
+                 and _owner_function(module, n) is fn]
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            if not isinstance(call.func, ast.Attribute):
+                continue
+            recv = dotted(call.func.value)
+            if not _is_allocator(recv):
+                continue
+            stmt = _owner_stmt(module, call)
+            if stmt is None or _owner_function(module, stmt) is not fn:
+                continue
+            kind = call.func.attr
+            if kind == "free":
+                out.append(Finding(
+                    RULE_ID, module.rel, call.lineno, call.col_offset,
+                    f"`{recv}.free(...)`: use release() — free() reads "
+                    "as an unconditional drop and is unsafe on "
+                    "CoW-shared refcounted pages"))
+                continue
+            if kind not in ("alloc", "share"):
+                continue
+            var = _tracked_var(stmt, call, kind)
+            if var == "<consumed>":
+                continue
+            allocs.append((stmt, var, call, kind))
+        if not allocs:
+            return out
+        cfg = CFG(fn)
+        for stmt, var, call, kind in allocs:
+            if var is None:
+                out.append(Finding(
+                    RULE_ID, module.rel, call.lineno, call.col_offset,
+                    f"{kind}() result is dropped (or bound to a pattern the "
+                    "analyzer cannot track): pages leak immediately"))
+                continue
+            consumers = {id(s) for s in stmts if s is not stmt
+                         and _consumes(s, var)}
+            esc = cfg.escaping_path(stmt, consumers)
+            if esc is not None:
+                where = ("function exit" if esc is EXIT or not hasattr(esc, "lineno")
+                         else f"the exit at line {esc.lineno}")
+                via = (" via an exception path"
+                       if _escapes_through_handler(esc, stmt) else "")
+                out.append(Finding(
+                    RULE_ID, module.rel, call.lineno, call.col_offset,
+                    f"pages from {kind}() into `{var}` can reach {where}"
+                    f"{via} without release()/ownership transfer"))
+        return out
+
+
+def _owner_function(module: Module, node: ast.AST) -> Optional[ast.AST]:
+    for p in module.parents(node):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+    return None
+
+
+def _owner_stmt(module: Module, node: ast.AST) -> Optional[ast.stmt]:
+    """Nearest enclosing statement (the CFG node a call anchors to)."""
+    if isinstance(node, ast.stmt):
+        return node
+    for p in module.parents(node):
+        if isinstance(p, ast.stmt):
+            return p
+    return None
+
+
+def _tracked_var(stmt: ast.stmt, call: ast.Call, kind: str) -> Optional[str]:
+    """Which local name holds the allocated pages after ``stmt``.
+
+    Returns "<consumed>" when the call result (or shared arg) is consumed
+    in the same statement, a name to track, or None when untrackable.
+    """
+    if kind == "share":
+        # share() bumps refcounts on pages the caller names: attribute- or
+        # call-rooted args are already-recorded state; a bare Name (or a
+        # literal list of Names) is a fresh reference that must be recorded
+        names: List[str] = []
+        for arg in call.args:
+            if isinstance(arg, ast.Starred):
+                arg = arg.value
+            if isinstance(arg, ast.Name):
+                names.append(arg.id)
+            elif isinstance(arg, (ast.List, ast.Tuple)):
+                names.extend(el.id for el in arg.elts
+                             if isinstance(el, ast.Name))
+            else:
+                return "<consumed>"
+        return names[0] if names else "<consumed>"
+    # alloc(): find where the call's value lands in this statement
+    if isinstance(stmt, ast.Expr) and stmt.value is call:
+        return None                      # bare expression: value dropped
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+        tgt = stmt.targets[0]
+        value = stmt.value
+        # x = alloc(..)  |  x = alloc(..)[0]  — track x when x is a Name;
+        # attribute/subscript targets are themselves the ownership record
+        if _contains(value, call):
+            if isinstance(tgt, ast.Name):
+                return tgt.id
+            if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                return "<consumed>"
+            return None                  # tuple-unpack etc: untrackable
+    if isinstance(stmt, (ast.Return, ast.AnnAssign, ast.AugAssign)):
+        return "<consumed>" if isinstance(stmt, ast.Return) else None
+    # alloc() nested directly inside a consuming call, e.g.
+    # slot.pages.append(alloc(1)[0]) or extend(alloc(n))
+    for node in ast.walk(stmt):
+        if (isinstance(node, ast.Call) and node is not call
+                and any(_contains(a, call) for a in node.args)):
+            return "<consumed>"
+    return None
+
+
+def _contains(root: ast.AST, needle: ast.AST) -> bool:
+    return any(n is needle for n in ast.walk(root))
+
+
+def _mentions(root: ast.AST, var: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == var
+               for n in ast.walk(root))
+
+
+def _consumes(stmt: ast.stmt, var: str) -> bool:
+    """Does this statement release or take ownership of ``var``?"""
+    if isinstance(stmt, (ast.Return, ast.Raise)):
+        return stmt.value is not None and _mentions(stmt.value, var)
+    if isinstance(stmt, ast.Assign):
+        if _mentions(stmt.value, var):
+            # recording into an attribute / subscript / another binding
+            # all count: the pages now live somewhere the caller owns
+            return True
+        return False
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+        call = stmt.value
+        args = [*call.args, *(kw.value for kw in call.keywords)]
+        if not any(_mentions(a, var) for a in args):
+            return False
+        d = dotted(call.func)
+        if d is None:
+            return True
+        if d in _READERS:
+            return False
+        # release()/free() consume; so do container mutators recording the
+        # pages (slot.pages.append(pid)) and arbitrary callee handoffs
+        return True
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        value = stmt.value
+        return value is not None and _mentions(value, var)
+    return False
+
+
+def _escapes_through_handler(esc_node: ast.AST, start: ast.stmt) -> bool:
+    """Best-effort tag: did the escaping path plausibly leave through an
+    except handler?  (The CFG query returns only the last node.)"""
+    for p in _parents_of(esc_node):
+        if isinstance(p, ast.ExceptHandler):
+            return True
+    return False
+
+
+def _parents_of(node: ast.AST):
+    while True:
+        node = getattr(node, "_repro_parent", None)
+        if node is None:
+            return
+        yield node

@@ -1,0 +1,267 @@
+"""jit-purity: functions reachable from ``jax.jit`` / ``pl.pallas_call`` /
+``make_*`` step factories must stay host-pure.
+
+A traced function runs *once* per compilation, not once per call, so any
+host effect inside it is a latent bug: ``self.*`` writes happen at trace
+time and then never again; Python RNG / clock reads bake a constant into
+the compiled program; mutable default arguments alias state across
+traces.  The pass roots the call graph at every jit/pallas entry point it
+can see (including dotted ``module.fn`` arguments, resolved through the
+importing module's aliases) and walks same-module calls and ``self.``
+method calls to a fixpoint.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..engine import Finding, Module, RepoContext, Rule, dotted, import_aliases
+
+RULE_ID = "jit-purity"
+
+# host-effect call roots (matched against the *resolved* import alias)
+_IMPURE_MODULES = {"random", "time", "secrets", "uuid"}
+_IMPURE_DOTTED_PREFIXES = ("numpy.random", "os.urandom", "os.environ")
+_IMPURE_BUILTINS = {"open", "input"}
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "clear", "add",
+             "discard", "update", "setdefault", "popitem", "sort", "reverse",
+             "appendleft", "popleft", "write"}
+
+
+def _func_key(node: ast.AST) -> Optional[Tuple[Optional[str], str]]:
+    """(class name or None, function name) for a def node."""
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return None
+    parent = getattr(node, "_repro_parent", None)
+    cls = parent.name if isinstance(parent, ast.ClassDef) else None
+    return (cls, node.name)
+
+
+class _ModuleIndex:
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.aliases = import_aliases(mod.tree)
+        # (class, name) -> def node; also name -> [def nodes] for bare calls
+        self.defs: Dict[Tuple[Optional[str], str], ast.AST] = {}
+        self.by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(mod.tree):
+            key = _func_key(node)
+            if key is not None:
+                self.defs[key] = node
+                self.by_name.setdefault(key[1], []).append(node)
+
+    def resolve(self, name: str) -> str:
+        """Local alias -> fully qualified dotted path (best effort)."""
+        head, _, tail = name.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{tail}" if tail else base
+
+
+class JitPurityRule(Rule):
+    id = RULE_ID
+    summary = ("functions reachable from jax.jit / pallas_call / make_* step "
+               "factories must not mutate host state, use Python RNG/clock/IO, "
+               "or carry mutable defaults")
+
+    def __init__(self):
+        self._cross_roots: Set[str] = set()   # fully qualified "pkg.mod.fn"
+
+    # -- phase 1: collect dotted jit roots across the whole module set ----
+
+    def prepare(self, modules: Sequence[Module], ctx: RepoContext) -> None:
+        self._cross_roots = set()
+        for mod in modules:
+            idx = _ModuleIndex(mod)
+            for call in ast.walk(mod.tree):
+                if not isinstance(call, ast.Call):
+                    continue
+                for target in _jit_arguments(call, idx):
+                    d = dotted(target)
+                    if d and "." in d:
+                        resolved = idx.resolve(d)
+                        if resolved.startswith("."):   # relative import
+                            resolved = _absolutize(mod, resolved)
+                        self._cross_roots.add(resolved)
+
+    # -- phase 2: per-module reachability + purity checks -----------------
+
+    def check(self, module: Module, ctx: RepoContext) -> List[Finding]:
+        idx = _ModuleIndex(module)
+        roots = self._local_roots(module, idx)
+        reachable = self._closure(roots, idx)
+        findings: List[Finding] = []
+        for fn in reachable:
+            findings.extend(self._check_function(fn, idx))
+        return findings
+
+    def _local_roots(self, module: Module, idx: _ModuleIndex) -> List[ast.AST]:
+        roots: List[ast.AST] = []
+        mod_dotted = module.dotted_name
+
+        def add_name(name: str):
+            roots.extend(idx.by_name.get(name, []))
+
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                for target in _jit_arguments(node, idx):
+                    d = dotted(target)
+                    if d is None:
+                        continue
+                    if "." not in d:
+                        add_name(d)
+                    elif d.startswith("self."):
+                        add_name(d.split(".", 1)[1])
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if _is_jit_expr(dec, idx):
+                        roots.append(node)
+                # step factories: the inner functions a make_* factory
+                # defines are the traced bodies, whoever jits them later
+                if node.name.startswith("make_"):
+                    for inner in node.body:
+                        if isinstance(inner, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef)):
+                            roots.append(inner)
+                if mod_dotted and f"{mod_dotted}.{node.name}" in self._cross_roots:
+                    roots.append(node)
+        return roots
+
+    def _closure(self, roots: List[ast.AST], idx: _ModuleIndex) -> List[ast.AST]:
+        seen: Set[int] = set()
+        order: List[ast.AST] = []
+        stack = list(roots)
+        while stack:
+            fn = stack.pop()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            order.append(fn)
+            for node in _walk_function(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d is None:
+                    continue
+                if "." not in d:
+                    stack.extend(idx.by_name.get(d, []))
+                elif d.startswith("self.") and d.count(".") == 1:
+                    stack.extend(idx.by_name.get(d.split(".", 1)[1], []))
+        return order
+
+    def _check_function(self, fn: ast.AST, idx: _ModuleIndex) -> List[Finding]:
+        out: List[Finding] = []
+        rel = idx.mod.rel
+
+        def flag(node, msg):
+            out.append(Finding(RULE_ID, rel, node.lineno,
+                               getattr(node, "col_offset", 0),
+                               f"in jit-reachable `{fn.name}`: {msg}"))
+
+        for default in (list(fn.args.defaults)
+                        + [d for d in fn.args.kw_defaults if d is not None]):
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(default, ast.Call)
+                    and dotted(default.func) in {"list", "dict", "set"}):
+                flag(default, "mutable default argument (shared across traces)")
+        for node in _walk_function(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                flat: List[ast.AST] = []
+                for tgt in targets:
+                    if isinstance(tgt, (ast.Tuple, ast.List)):
+                        flat.extend(tgt.elts)
+                    else:
+                        flat.append(tgt)
+                for tgt in flat:
+                    base = tgt
+                    while isinstance(base, (ast.Attribute, ast.Subscript)):
+                        base = base.value
+                    if (isinstance(tgt, (ast.Attribute, ast.Subscript))
+                            and isinstance(base, ast.Name)
+                            and base.id == "self"):
+                        flag(tgt, "writes host state through `self` "
+                                  "(runs at trace time only)")
+            elif isinstance(node, ast.Global):
+                flag(node, "writes module globals from traced code")
+            elif isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d is None:
+                    continue
+                if d in _IMPURE_BUILTINS:
+                    flag(node, f"host IO call `{d}()` inside traced code")
+                    continue
+                resolved = idx.resolve(d)
+                head = resolved.split(".")[0]
+                if head in _IMPURE_MODULES or any(
+                        resolved.startswith(p) for p in _IMPURE_DOTTED_PREFIXES):
+                    flag(node, f"impure host call `{d}` (resolves to "
+                               f"`{resolved}`): traced once, then frozen")
+                elif (d.startswith("self.") and d.count(".") >= 2
+                        and d.rsplit(".", 1)[1] in _MUTATORS):
+                    flag(node, f"mutates host container `{d.rsplit('.', 1)[0]}`")
+        return out
+
+
+def _walk_function(fn: ast.AST):
+    """Walk a function body without descending into nested defs/classes
+    (nested defs are pulled into the closure separately if called)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _is_jit_expr(node: ast.AST, idx: _ModuleIndex) -> bool:
+    """Is this expression `jax.jit` / `jit` / `functools.partial(jax.jit, ..)`?"""
+    d = dotted(node)
+    if d is not None:
+        return idx.resolve(d) in {"jax.jit", "jax.named_call", "jax.jit.jit"}
+    if isinstance(node, ast.Call):
+        fd = dotted(node.func)
+        if fd and idx.resolve(fd) in {"functools.partial", "partial"}:
+            return bool(node.args) and _is_jit_expr(node.args[0], idx)
+        if fd and idx.resolve(fd) == "jax.jit":
+            return True
+    return False
+
+
+def _jit_arguments(call: ast.Call, idx: _ModuleIndex) -> List[ast.AST]:
+    """The function-valued argument(s) a jit/pallas_call invocation traces."""
+    d = dotted(call.func)
+    if d is None:
+        return []
+    resolved = idx.resolve(d)
+    traced: List[ast.AST] = []
+    if resolved in {"jax.jit"} or d in {"jit", "jax.jit"}:
+        if call.args:
+            traced.append(call.args[0])
+    elif resolved.endswith("pallas_call") or d.endswith("pallas_call"):
+        if call.args:
+            traced.append(call.args[0])
+    out: List[ast.AST] = []
+    for t in traced:
+        if (isinstance(t, ast.Call) and dotted(t.func)
+                and idx.resolve(dotted(t.func)) in {"functools.partial",
+                                                    "partial"} and t.args):
+            out.append(t.args[0])
+        else:
+            out.append(t)
+    return out
+
+
+def _absolutize(mod: Module, relative: str) -> str:
+    """Resolve a `from ..models import kvcache`-style alias against the
+    importing module's dotted path."""
+    pkg = mod.dotted_name
+    if pkg is None:
+        return relative.lstrip(".")
+    parts = pkg.split(".")[:-1]
+    level = len(relative) - len(relative.lstrip("."))
+    tail = relative.lstrip(".")
+    base = parts[: len(parts) - (level - 1)] if level > 1 else parts
+    return ".".join(base + ([tail] if tail else []))

@@ -1,0 +1,179 @@
+"""kernel-rules: Pallas kernel hygiene.
+
+Three checks, scoped to modules that call ``pallas_call`` (or live under
+a ``kernels/`` package):
+
+* **fp32 accumulation** — VMEM scratch accumulators must be
+  ``jnp.float32`` (the online-softmax running state and matmul
+  accumulators lose exactness in bf16, which is precisely the parity bug
+  class the kernel CI tier pins), and matmul operands must not be raw
+  ``*_ref[...]`` loads (cast with ``.astype(jnp.float32)`` first).
+* **no hardcoded ``interpret=``** — a literal ``interpret=True`` in a
+  ``pallas_call`` silently pins the slow interpreter (or, ``False``,
+  breaks CPU CI); the flag must route through
+  ``kernels/runtime.resolve_interpret`` so the environment decides.
+* **page-table masking** — a kernel that indexes through a page table
+  (``pt``/``page_table``/``*_table`` names) must carry a ``>= 0`` (or
+  ``< 0``) validity compare or a ``maximum(..., 0)`` clamp in the same
+  function: unmapped table entries are ``-1``, and an unmasked load from
+  page ``-1`` wraps to the last page and reads another request's KV.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from ..engine import Finding, Module, RepoContext, Rule, dotted
+
+RULE_ID = "kernel-rules"
+
+_TABLE_NAME = re.compile(r"(^|_)(pt|page_table|table)(_ref)?$")
+
+
+def _is_kernel_module(module: Module) -> bool:
+    if "kernels" in module.path.parts:
+        return True
+    return any(isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+               and n.func.attr == "pallas_call"
+               for n in ast.walk(module.tree))
+
+
+class KernelRules(Rule):
+    id = RULE_ID
+    summary = ("Pallas kernels: fp32 VMEM accumulators and matmul inputs, "
+               "interpret= via runtime.resolve_interpret, page-table loads "
+               "masked against -1")
+
+    def check(self, module: Module, ctx: RepoContext) -> List[Finding]:
+        if not _is_kernel_module(module):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d and d.split(".")[-1] == "pallas_call":
+                out.extend(self._check_pallas_call(module, node))
+            if d and d.split(".")[-1] == "VMEM":
+                out.extend(self._check_vmem(module, node))
+        for fn in ast.walk(module.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._check_table_masking(module, fn))
+                out.extend(self._check_matmul_operands(module, fn))
+        return out
+
+    def _check_pallas_call(self, module: Module,
+                           call: ast.Call) -> List[Finding]:
+        out = []
+        for kw in call.keywords:
+            if kw.arg != "interpret":
+                continue
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, bool):
+                out.append(Finding(
+                    RULE_ID, module.rel, kw.value.lineno, kw.value.col_offset,
+                    f"hardcoded interpret={kw.value.value} in pallas_call: "
+                    "route through kernels/runtime.resolve_interpret() so "
+                    "the environment picks interpret vs Mosaic"))
+        return out
+
+    def _check_vmem(self, module: Module, call: ast.Call) -> List[Finding]:
+        if len(call.args) < 2:
+            return []
+        dt = call.args[1]
+        name = dotted(dt)
+        if name is not None and not name.endswith("float32"):
+            return [Finding(
+                RULE_ID, module.rel, dt.lineno, dt.col_offset,
+                f"VMEM scratch dtype `{name}`: kernel accumulators (running "
+                "max / normalizer / acc) must be jnp.float32")]
+        return []
+
+    # -- matmul operand casting -------------------------------------------
+
+    def _check_matmul_operands(self, module: Module,
+                               fn: ast.AST) -> List[Finding]:
+        out = []
+        for node in ast.walk(fn):
+            operands: List[ast.AST] = []
+            where = None
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d and d.split(".")[-1] in ("dot_general", "dot"):
+                    operands = list(node.args[:2])
+                    where = node
+            elif isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                            ast.MatMult):
+                operands = [node.left, node.right]
+                where = node
+            for op in operands:
+                if _is_raw_ref_load(op):
+                    out.append(Finding(
+                        RULE_ID, module.rel, op.lineno, op.col_offset,
+                        "matmul operand is a raw ref load: cast with "
+                        ".astype(jnp.float32) so the MXU accumulates in "
+                        "fp32, matching the VMEM scratch"))
+        return out
+
+    # -- page-table mask post-domination ----------------------------------
+
+    def _check_table_masking(self, module: Module,
+                             fn: ast.AST) -> List[Finding]:
+        loads = []
+        guarded = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Subscript):
+                base = dotted(node.value)
+                if base is not None and _TABLE_NAME.search(base.split(".")[-1]):
+                    if isinstance(node.ctx, ast.Load):
+                        loads.append((node, base))
+            if _is_table_guard(node):
+                guarded = True
+        if loads and not guarded:
+            return [Finding(
+                RULE_ID, module.rel, n.lineno, n.col_offset,
+                f"page-table load `{base}[...]` in `{fn.name}` has no "
+                "`>= 0` mask or `maximum(..., 0)` clamp on its path: "
+                "-1 (unmapped) entries wrap around and read another "
+                "slot's pages") for n, base in loads]
+        return []
+
+
+def _is_raw_ref_load(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and node.value.id.endswith("_ref")
+            and isinstance(node.ctx, ast.Load))
+
+
+def _is_table_guard(node: ast.AST) -> bool:
+    """A `-1`-mask idiom: `pt... >= 0`, `pt... < 0`, or a
+    `maximum(pt..., 0)` clamp."""
+    if isinstance(node, ast.Compare) and len(node.ops) == 1:
+        comp = node.comparators[0]
+        if (isinstance(node.ops[0], (ast.GtE, ast.Lt))
+                and isinstance(comp, ast.Constant) and comp.value == 0
+                and _mentions_table(node.left)):
+            return True
+    if isinstance(node, ast.Call):
+        d = dotted(node.func)
+        if (d and d.split(".")[-1] == "maximum" and len(node.args) == 2
+                and isinstance(node.args[1], ast.Constant)
+                and node.args[1].value == 0
+                and _mentions_table(node.args[0])):
+            return True
+    return False
+
+
+def _mentions_table(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        name: Optional[str] = None
+        if isinstance(n, ast.Name):
+            name = n.id
+        elif isinstance(n, ast.Attribute):
+            name = n.attr
+        if name is not None and _TABLE_NAME.search(name):
+            return True
+    return False

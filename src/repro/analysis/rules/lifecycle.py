@@ -1,0 +1,156 @@
+"""lifecycle: ``Slot.state`` changes only through ``to()`` /
+``force_empty()``, and every transition the code spells out must be an
+edge of ``lifecycle.TRANSITIONS``.
+
+The transition table is the contract the whole preemption/parking
+machinery (and its tests) lean on: a direct ``slot.state = SlotState.X``
+write bypasses the runtime check silently, and a ``to()`` call along an
+illegal edge only explodes when that path actually runs.  This pass
+parses the enum and table out of ``serve/lifecycle.py`` and checks, at
+lint time:
+
+* no ``<expr>.state = SlotState.X`` assignment outside the defining module;
+* every ``SlotState.X`` reference names a real member;
+* chained ``slot.to(A).to(B)`` implies edge ``A -> B``;
+* a ``to(X)`` guarded by ``if slot.state is SlotState.Y`` implies ``Y -> X``;
+* any other ``to(X)`` target must at least be a destination of *some* edge;
+* ``force_empty()`` is called only from ``reset()`` (the documented escape
+  hatch for whole-scheduler teardown).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from ..engine import Finding, Module, RepoContext, Rule, dotted
+
+RULE_ID = "lifecycle"
+
+
+class LifecycleRule(Rule):
+    id = RULE_ID
+    summary = ("Slot.state written only via to()/force_empty(); spelled-out "
+               "transitions must be edges of lifecycle.TRANSITIONS")
+
+    def check(self, module: Module, ctx: RepoContext) -> List[Finding]:
+        if not ctx.states:
+            return []      # no lifecycle module found: nothing to enforce
+        try:
+            if module.path.resolve() == ctx.lifecycle_path.resolve():
+                return []  # the defining module owns the raw writes
+        except OSError:
+            pass
+        out: List[Finding] = []
+        uses_lifecycle = any(isinstance(n, ast.Name) and n.id == "SlotState"
+                             for n in ast.walk(module.tree))
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Attribute) and tgt.attr == "state"
+                            and _slotstate_member(node.value) is not None):
+                        out.append(Finding(
+                            RULE_ID, module.rel, node.lineno, node.col_offset,
+                            "direct `.state = SlotState...` write bypasses "
+                            "the transition table: use Slot.to()"))
+            elif isinstance(node, ast.Attribute) and uses_lifecycle:
+                member = _slotstate_member(node)
+                if member is not None and member not in ctx.states:
+                    out.append(Finding(
+                        RULE_ID, module.rel, node.lineno, node.col_offset,
+                        f"unknown slot state `SlotState.{member}`"))
+            elif isinstance(node, ast.Call):
+                out.extend(self._check_call(module, ctx, node))
+        return out
+
+    def _check_call(self, module: Module, ctx: RepoContext,
+                    call: ast.Call) -> List[Finding]:
+        out: List[Finding] = []
+        if not isinstance(call.func, ast.Attribute):
+            return out
+        attr = call.func.attr
+        if attr == "force_empty":
+            owner = _enclosing_function(module, call)
+            if owner is not None and owner.name not in ("reset", "force_empty"):
+                out.append(Finding(
+                    RULE_ID, module.rel, call.lineno, call.col_offset,
+                    f"force_empty() outside reset() (in `{owner.name}`): it "
+                    "skips the transition table; drive DRAINED -> EMPTY "
+                    "through to()"))
+            return out
+        if attr != "to" or len(call.args) != 1:
+            return out
+        dst = _slotstate_member(call.args[0])
+        if dst is None:
+            return out
+        if dst not in ctx.states:
+            return out     # already reported as unknown member above
+        src, how = self._infer_source(module, call)
+        if src is not None:
+            if not ctx.is_edge(src, dst):
+                out.append(Finding(
+                    RULE_ID, module.rel, call.lineno, call.col_offset,
+                    f"transition {src} -> {dst} ({how}) is not an edge of "
+                    "lifecycle.TRANSITIONS"))
+        elif dst not in ctx.destinations:
+            out.append(Finding(
+                RULE_ID, module.rel, call.lineno, call.col_offset,
+                f"to(SlotState.{dst}): no edge in lifecycle.TRANSITIONS "
+                "ends in this state"))
+        return out
+
+    def _infer_source(self, module: Module,
+                      call: ast.Call) -> Tuple[Optional[str], str]:
+        """Best-effort source state for a ``.to(X)`` call."""
+        recv = call.func.value
+        # chained: slot.to(A).to(B) — receiver is itself a to() call
+        if (isinstance(recv, ast.Call) and isinstance(recv.func, ast.Attribute)
+                and recv.func.attr == "to" and len(recv.args) == 1):
+            src = _slotstate_member(recv.args[0])
+            if src is not None:
+                return src, "chained to()"
+        base = dotted(recv)
+        if base is None:
+            return None, ""
+        node: ast.AST = call
+        for parent in module.parents(call):
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+            if isinstance(parent, ast.If) and _in_body(parent, node):
+                src = _guard_state(parent.test, base)
+                if src is not None:
+                    return src, f"guarded by `{base}.state is SlotState.{src}`"
+            node = parent
+        return None, ""
+
+
+def _slotstate_member(node: Optional[ast.AST]) -> Optional[str]:
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "SlotState"):
+        return node.attr
+    return None
+
+
+def _enclosing_function(module: Module, node: ast.AST):
+    for p in module.parents(node):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+    return None
+
+
+def _in_body(if_node: ast.If, child: ast.AST) -> bool:
+    return any(child is s for s in if_node.body)
+
+
+def _guard_state(test: ast.AST, base: str) -> Optional[str]:
+    """``<base>.state is SlotState.Y`` (or ==) in a guard expression."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Compare) or len(node.ops) != 1:
+            continue
+        if not isinstance(node.ops[0], (ast.Is, ast.Eq)):
+            continue
+        left = node.left
+        if (isinstance(left, ast.Attribute) and left.attr == "state"
+                and dotted(left.value) == base):
+            return _slotstate_member(node.comparators[0])
+    return None

@@ -1,0 +1,102 @@
+"""sharding-registry: every literal ``PartitionSpec`` axis name (and every
+literal mesh ``axis_names`` tuple) must name an axis in
+``dist.sharding.MESH_AXES``.
+
+A typo'd axis name in a ``P(...)`` does not fail at construction — it
+fails at ``device_put``/``jit`` time on whatever mesh happens to be
+active, usually far from the spec that introduced it (and the 1x1 smoke
+mesh in CI can mask it entirely when the misspelled axis ends up
+unsharded).  The registry is parsed from ``dist/sharding.py``'s AST, so
+the pass follows the source of truth.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..engine import Finding, Module, RepoContext, Rule, dotted, import_aliases
+
+RULE_ID = "sharding-registry"
+
+_PSPEC_FQNS = {"jax.sharding.PartitionSpec",
+               "jax.experimental.pjit.PartitionSpec"}
+_MESH_CTORS = {"make_mesh", "Mesh", "AbstractMesh"}
+
+
+def _pspec_aliases(module: Module) -> Set[str]:
+    """Local names bound to PartitionSpec (imports plus `P2 = P` renames)."""
+    aliases = {name for name, fq in import_aliases(module.tree).items()
+               if fq in _PSPEC_FQNS or fq.endswith(".PartitionSpec")}
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(module.tree):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in aliases
+                    and node.targets[0].id not in aliases):
+                aliases.add(node.targets[0].id)
+                changed = True
+    return aliases
+
+
+class ShardingRegistryRule(Rule):
+    id = RULE_ID
+    summary = ("every literal PartitionSpec / mesh axis name must exist in "
+               "dist.sharding.MESH_AXES")
+
+    def check(self, module: Module, ctx: RepoContext) -> List[Finding]:
+        if not ctx.mesh_axes:
+            return []
+        out: List[Finding] = []
+        aliases = _pspec_aliases(module)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None:
+                continue
+            name = d.split(".")[-1]
+            if d in aliases or name == "PartitionSpec":
+                for s in _literal_strs(list(node.args)
+                                       + [k.value for k in node.keywords]):
+                    if s.value not in ctx.mesh_axes:
+                        out.append(self._finding(module, s, "PartitionSpec"))
+            elif name in _MESH_CTORS:
+                for arg in self._axis_args(node, name):
+                    for s in _literal_strs([arg]):
+                        if s.value not in ctx.mesh_axes:
+                            out.append(self._finding(module, s, name))
+        return out
+
+    def _axis_args(self, call: ast.Call, ctor: str) -> List[ast.AST]:
+        out = []
+        for kw in call.keywords:
+            if kw.arg in ("axis_names", "names"):
+                out.append(kw.value)
+        if not out and len(call.args) >= 2:
+            out.append(call.args[1])
+        return out
+
+    def _finding(self, module: Module, node: ast.Constant,
+                 where: str) -> Finding:
+        return Finding(
+            RULE_ID, module.rel, node.lineno, node.col_offset,
+            f"axis name '{node.value}' in {where} is not in "
+            "dist.sharding.MESH_AXES — typo, or register the new axis there")
+
+
+def _literal_strs(nodes: List[ast.AST]) -> List[ast.Constant]:
+    out: List[ast.Constant] = []
+    for root in nodes:
+        if root is None:
+            continue
+        for n in ast.walk(root):
+            if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                out.append(n)
+    return out
+
+
+__all__ = ["ShardingRegistryRule", "RULE_ID"]

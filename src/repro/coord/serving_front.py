@@ -232,7 +232,7 @@ class ServingFrontend:
         ctx.crash_point("post-model")
         # one storage-write-equivalent latency per batch (result persistence)
         yield Sleep(self.cloud.sample("kv_write", size_kb=1.0))
-        for msg, out in zip(fresh, outputs):
+        for msg, out in zip(fresh, outputs, strict=True):
             body = msg.body
             self._complete(body["session"], body["request_id"], out)
             yield Sleep(self.cloud.sample("tcp_rtt"))

@@ -38,7 +38,7 @@ class HeartbeatCore:
         yield Wait(tuple(pings))
         ctx.crash_point("after_pings")
 
-        for sid, task in zip(live, pings):
+        for sid, task in zip(live, pings, strict=True):
             if task.result is False:
                 self.evictions += 1
                 yield from self.service.enqueue_deregistration(sid)

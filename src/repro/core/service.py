@@ -98,11 +98,11 @@ class FaaSKeeperService:
         self.clients[client.session_id] = client
         self.session_queue(client.session_id)
 
-    def make_client(self, session_id: str, region: str = None) -> FaaSKeeperClient:
+    def make_client(self, session_id: str, region: Optional[str] = None) -> FaaSKeeperClient:
         region = region or next(iter(self.data_stores))
         return FaaSKeeperClient(self, session_id, region)
 
-    def connect_sync(self, session_id: str, region: str = None) -> SyncClient:
+    def connect_sync(self, session_id: str, region: Optional[str] = None) -> SyncClient:
         client = self.make_client(session_id, region)
         self.cloud.run_task(client.connect(), name=f"connect:{session_id}")
         return SyncClient(client)

@@ -41,7 +41,7 @@ def _install_abstract_mesh() -> None:
                 and all(isinstance(n, str) for n in args[1])
             ):
                 sizes, names = args[0], args[1]
-                super().__init__(tuple(zip(names, sizes)), *args[2:], **kwargs)
+                super().__init__(tuple(zip(names, sizes, strict=True)), *args[2:], **kwargs)
             else:
                 super().__init__(*args, **kwargs)
 

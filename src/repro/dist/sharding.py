@@ -58,6 +58,15 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 
+# The full mesh-axis vocabulary.  Every axis name a PartitionSpec (or a
+# mesh constructor) may spell out literally lives here: ``pod`` (inter-pod
+# hierarchical DP, multi-pod only), ``data`` (intra-pod DP), ``model``
+# (tensor parallel).  The static-analysis sharding pass parses this tuple
+# from the AST and flags any literal axis name outside it — register a new
+# axis here before using it in a spec.
+MESH_AXES: Tuple[str, ...] = ("pod", "data", "model")
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
     """Logical axis roles for a (possibly abstract) mesh."""
@@ -91,9 +100,9 @@ def _axes_size(entry, mesh) -> int:
 def _fit_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
     """Divisibility guard: drop any spec entry whose axes do not evenly
     divide the corresponding dim (rules stay total over shapes/meshes)."""
-    entries = list(spec) + [None] * (len(shape) - len(spec))
+    entries = [*spec] + [None] * (len(shape) - len(spec))
     out = []
-    for dim, entry in zip(shape, entries):
+    for dim, entry in zip(shape, entries, strict=True):
         if entry is None:
             out.append(None)
         else:
@@ -250,7 +259,7 @@ def batch_shardings(batch_abs: PyTree, mesh) -> PyTree:
     def assign(leaf):
         shape = tuple(leaf.shape)
         if rules.dp and shape and shape[0] % dp_size == 0:
-            return NamedSharding(mesh, P(*([tuple(rules.dp)] + [None] * (len(shape) - 1))))
+            return NamedSharding(mesh, P(tuple(rules.dp), *([None] * (len(shape) - 1))))
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map(assign, batch_abs)

@@ -222,7 +222,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     try:
         lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod, **kw)
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         return {"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 **({"kernel": kw["kernel"]} if kw.get("kernel", "gather")
@@ -237,7 +237,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t1 = time.time()
     try:
         compiled = lowered.compile()
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         rec.update(status="COMPILE_FAIL", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-2000:])
         return rec
@@ -257,7 +257,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         tmp_b = rec["memory"]["temp_bytes"] or 0
         rec["memory"]["per_device_total"] = arg_b + tmp_b
         rec["memory"]["fits_hbm"] = (arg_b + tmp_b) <= HBM_PER_CHIP
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         rec["memory"] = {"error": str(e)}
 
     # --- cost / flops ------------------------------------------------------------
@@ -267,7 +267,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             cost = cost[0]
         rec["flops_per_device"] = float(cost.get("flops", 0.0))
         rec["hbm_bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         rec["cost_error"] = str(e)
         rec["flops_per_device"] = 0.0
         rec["hbm_bytes_per_device"] = 0.0
@@ -281,7 +281,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             "count_by_kind": stats.count_by_kind,
             "wire_bytes_per_device": stats.wire_bytes,
         }
-    except Exception as e:  # noqa: BLE001
+    except Exception as e:
         rec["collectives"] = {"error": str(e)}
     return rec
 

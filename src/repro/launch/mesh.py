@@ -11,10 +11,12 @@ from __future__ import annotations
 
 import jax
 
+from ..dist.sharding import MESH_AXES
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = MESH_AXES if multi_pod else MESH_AXES[1:]
     return jax.make_mesh(shape, axes)
 
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +53,8 @@ def _whole_batch_model_fn(model, params, max_new: int):
 
 
 def validate_pool_sizing(*, batch_size: int, prompt_len: int, max_new: int,
-                         page_size: int, kv_pages: int = None,
-                         prefill_chunk: int = None,
+                         page_size: int, kv_pages: Optional[int] = None,
+                         prefill_chunk: Optional[int] = None,
                          offload: bool = False) -> int:
     """Fail fast — at startup, with the arithmetic spelled out — instead of
     letting an undersized pool stall the first admission mid-run.
@@ -106,9 +106,9 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    batch_size: int, max_new: int, prompt_len: int,
                    temperature: float = 0.0, top_k: int = 0,
                    mesh=None, kv_mode: str = "paged", page_size: int = 16,
-                   prefill_chunk: int = None,
-                   kv_pages: int = None, offload: bool = False,
-                   preempt_policy: str = None,
+                   prefill_chunk: Optional[int] = None,
+                   kv_pages: Optional[int] = None, offload: bool = False,
+                   preempt_policy: Optional[str] = None,
                    idle_preempt_steps: int = 0,
                    prefix_sharing: bool = False,
                    park_sessions: bool = False,
@@ -191,8 +191,8 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 mode: str = "continuous", temperature: float = 0.0,
                 top_k: int = 0, seed: int = 0, quiet: bool = False,
                 kv_mode: str = "paged", page_size: int = 16,
-                prefill_chunk: int = None, kv_pages: int = None,
-                offload: bool = False, preempt_policy: str = None,
+                prefill_chunk: Optional[int] = None, kv_pages: Optional[int] = None,
+                offload: bool = False, preempt_policy: Optional[str] = None,
                 idle_preempt_steps: int = 0,
                 prefix_sharing: bool = False, park_sessions: bool = False,
                 park_ttl_steps: int = 0, attn_backend: str = "gather"):

@@ -371,7 +371,7 @@ class PrefixIndex:
         """Publish (hash, page) pairs not already indexed; the index takes
         one reference per page it actually adopts.  Returns how many."""
         n = 0
-        for h, pid in zip(hashes, page_ids):
+        for h, pid in zip(hashes, page_ids, strict=True):
             if h in self._pages:
                 continue
             allocator.share([pid])
@@ -705,7 +705,8 @@ def _slot_axis(batch_shape: Tuple[int, ...], one_shape: Tuple[int, ...]) -> Opti
     shapes disagree (stacked leaves carry a leading layer dim, tail leaves do
     not — shape matching handles both without per-family knowledge).
     """
-    diffs = [i for i, (a, b) in enumerate(zip(batch_shape, one_shape)) if a != b]
+    diffs = [i for i, (a, b)
+             in enumerate(zip(batch_shape, one_shape, strict=False)) if a != b]
     if not diffs:
         return None  # identical shapes: pool leaves / n_slots == 1 — replace wholesale
     if len(diffs) > 1 or one_shape[diffs[0]] != 1:

@@ -240,10 +240,17 @@ def sdpa_append(q: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
     s_new = jnp.einsum("bshgd,bthd->bhgst", qg, k_new).astype(jnp.float32)
     s_new = s_new / math.sqrt(D)   # self-attention of the new token: always valid
     s = jnp.concatenate([s_old, s_new], axis=-1)
-    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    # probs and the value accumulation stay fp32, cast once on the way out —
+    # matching the fused paged kernel's fp32 VMEM online-softmax state.
+    # Rounding probs to the activation dtype here gave ~1-ulp logit skew vs
+    # the kernel, which the MoE router's discreteness could amplify into a
+    # token flip (the seed-pinned parity cases test_paged_kernel.py carried).
+    p = jax.nn.softmax(s, axis=-1)
     p_old, p_new = p[..., :-1], p[..., -1:]
-    out = jnp.einsum("bhgst,bthd->bshgd", p_old, cv)
-    out = out + jnp.einsum("bhgst,bthd->bshgd", p_new, v_new)
+    out = jnp.einsum("bhgst,bthd->bshgd", p_old, cv.astype(jnp.float32))
+    out = out + jnp.einsum("bhgst,bthd->bshgd", p_new,
+                           v_new.astype(jnp.float32))
+    out = out.astype(q.dtype)
     from ..dist.sharding import constrain
 
     return constrain(out.reshape(B, S, H, D), "attn_out")

@@ -12,6 +12,7 @@ Decode keeps an O(1) recurrent state — this is why mamba2 runs the
 
 from __future__ import annotations
 
+import operator
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -251,8 +252,8 @@ class Mamba2LM(DenseLM):
         else:
             outs = []
             for i in range(cfg.n_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
-                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["layers"])
+                lc = jax.tree_util.tree_map(operator.itemgetter(i), layer_caches)
                 x, nc = layer_fn(x, (p, lc))
                 outs.append(nc)
             new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)

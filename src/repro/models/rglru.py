@@ -17,6 +17,7 @@ non-divisible tail unrolled — HLO stays O(1) in depth.
 
 from __future__ import annotations
 
+import operator
 import math
 from typing import Dict, Optional, Tuple
 
@@ -253,7 +254,7 @@ class RecurrentLM(DenseLM):
             x, _ = jax.lax.scan(fn, x, params["blocks"])
         else:
             for i in range(self.n_sb):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["blocks"])
                 x, _ = fn(x, p)
         for j, kind in enumerate(self.tail_pattern):
             x, _ = _layer_step(params["tail"][f"t{j}"], cfg, kind, x,
@@ -317,8 +318,8 @@ class RecurrentLM(DenseLM):
         else:
             outs = []
             for i in range(self.n_sb):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
-                lc = jax.tree_util.tree_map(lambda a: a[i], cache["blocks"])
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["blocks"])
+                lc = jax.tree_util.tree_map(operator.itemgetter(i), cache["blocks"])
                 x, nc = sb_body(x, (p, lc))
                 outs.append(nc)
             new_blocks = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)

@@ -9,6 +9,7 @@ and whisper.py (which adds cross-attention).
 
 from __future__ import annotations
 
+import operator
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -145,7 +146,7 @@ class DenseLM:
         else:
             aux = aux_init
             for i in range(cfg.n_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+                p = jax.tree_util.tree_map(operator.itemgetter(i), stacked)
                 (x, aux), _ = fn((x, aux), p)
         return x, aux
 
@@ -205,8 +206,8 @@ class DenseLM:
         else:
             outs = []
             for i in range(cfg.n_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
-                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["layers"])
+                lc = jax.tree_util.tree_map(operator.itemgetter(i), layer_caches)
                 x, nc = fn(x, (p, lc))
                 outs.append(nc)
             new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)

@@ -10,6 +10,7 @@ inherited from :class:`DenseLM` unchanged.
 
 from __future__ import annotations
 
+import operator
 from typing import Dict, Tuple
 
 import jax
@@ -89,8 +90,8 @@ class VisionLM(DenseLM):
             outs = []
             x = x_embed
             for i in range(cfg.n_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
-                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["layers"])
+                lc = jax.tree_util.tree_map(operator.itemgetter(i), layer_caches)
                 x, nc = body(x, (p, lc))
                 outs.append(nc)
             new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)

@@ -11,6 +11,7 @@ cross-attn k/v computed once from the encoder output.
 
 from __future__ import annotations
 
+import operator
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -96,7 +97,7 @@ class EncDecLM(DenseLM):
             x, _ = jax.lax.scan(fn, x, params["enc_layers"])
         else:
             for i in range(cfg.encdec.n_encoder_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["enc_layers"])
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["enc_layers"])
                 x, _ = fn(x, p)
         return layers.apply_norm(cfg.norm, params["enc_norm"], x)
 
@@ -127,7 +128,7 @@ class EncDecLM(DenseLM):
             x, _ = jax.lax.scan(fn, x, params["layers"])
         else:
             for i in range(cfg.n_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["layers"])
                 x, _ = fn(x, p)
         x = layers.apply_norm(cfg.norm, params["final_norm"], x)
         return constrain(layers.lm_head(params["embedding"], cfg, x), "logits")
@@ -204,8 +205,8 @@ class EncDecLM(DenseLM):
         else:
             outs = []
             for i in range(cfg.n_layers):
-                p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
-                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                p = jax.tree_util.tree_map(operator.itemgetter(i), params["layers"])
+                lc = jax.tree_util.tree_map(operator.itemgetter(i), layer_caches)
                 x, nc = body(x, (p, lc))
                 outs.append(nc)
             new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
@@ -220,7 +221,7 @@ def _stack_kv(layers_params, cfg, enc_out):
     ks, vs = [], []
     n = jax.tree_util.tree_leaves(layers_params)[0].shape[0]
     for i in range(n):
-        p = jax.tree_util.tree_map(lambda a: a[i], layers_params)
+        p = jax.tree_util.tree_map(operator.itemgetter(i), layers_params)
         k, v = _enc_kv(p["xattn"], cfg, enc_out)
         ks.append(k)
         vs.append(v)

@@ -7,7 +7,7 @@ cells lower ``serve_step``, not ``train_step``).
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +61,7 @@ def make_offload_steps() -> tuple:
     return extract, inject
 
 
-def make_prefill(model, seq_len: int = None) -> Callable:
+def make_prefill(model, seq_len: Optional[int] = None) -> Callable:
     """``seq_len`` sizes the cache for the *total* sequence (prompt + decode
     budget): without it the legacy prompt-sized ring silently evicts the
     oldest prompt tokens once decode wraps it."""
@@ -78,7 +78,7 @@ def make_prefill(model, seq_len: int = None) -> Callable:
 
 
 def generate(model, params, prompt: jnp.ndarray, max_new: int, *extra,
-             seq_len: int = None) -> jnp.ndarray:
+             seq_len: Optional[int] = None) -> jnp.ndarray:
     """Greedy autoregressive generation (examples / integration tests).
 
     Pass ``seq_len >= prompt + max_new`` for an eviction-free decode — the

@@ -1029,11 +1029,19 @@ class DecodeScheduler:
 
     # -- decode loop ---------------------------------------------------------------
 
-    def _sample(self, logits: jnp.ndarray, key=None) -> jnp.ndarray:
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        """Host-side sampling: advances the scheduler's PRNG state, then
+        defers to the pure helper.  Never called from traced code — the
+        jitted step takes its subkey as an argument instead."""
+        key = None
+        if self.temperature > 0.0:
+            self._key, key = jax.random.split(self._key)
+        return self._sample_pure(logits, key)
+
+    def _sample_pure(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        """Trace-safe sampling: no host state touched, key passed in."""
         if self.temperature <= 0.0:
             return sampling.greedy(logits)
-        if key is None:
-            self._key, key = jax.random.split(self._key)
         return sampling.temperature_sample(key, logits, self.temperature,
                                            self.top_k)
 
@@ -1049,7 +1057,7 @@ class DecodeScheduler:
         """
         logits, new_cache = self.model.decode_step(params, cache, last_tokens[:, None])
         new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
-        toks = self._sample(logits[:, -1], key)
+        toks = self._sample_pure(logits[:, -1], key)
         toks = jnp.where(active, toks, last_tokens)
         b = jnp.arange(self.n_slots, dtype=jnp.int32)
         # inactive rows scatter out of bounds -> dropped

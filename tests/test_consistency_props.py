@@ -126,7 +126,7 @@ def test_consistency_model(ops, crashes, seed):
 
     # -- L: linearized writes (per-session FIFO) --------------------------------
     per_session: Dict[str, List[int]] = {}
-    for s, _, _, txid, idx in log["acks"]:
+    for s, _, _, txid, _idx in log["acks"]:
         per_session.setdefault(s, []).append(txid)
     for s, seq in per_session.items():
         assert seq == sorted(seq), f"session {s} acks out of txid order: {seq}"
@@ -193,7 +193,7 @@ def test_writer_distributor_commit_race_regression():
     c = svc.connect_sync("bench")
     c.create("/bench", b"init")
     payload = b"x" * (64 * 1024)
-    for i in range(10):
+    for _i in range(10):
         c.set_data("/bench", payload)
     store = next(iter(svc.data_stores.values()))
     assert store.objects["/bench"]["data"] == payload

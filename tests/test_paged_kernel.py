@@ -18,15 +18,17 @@ from repro.serve.engine import generate
 from repro.serve.scheduler import DecodeScheduler
 from test_paged_kvcache import run_all, tiny
 
-# Seeds are pinned per arch: the fused kernel keeps softmax probabilities in
-# fp32 where the gather path's sdpa_append rounds them to the activation
-# dtype before the value einsum, so logits differ at bf16-rounding level
-# (~1 ulp).  Dense/hybrid argmax is robust to that; the MoE router's
-# discreteness can amplify it into a token flip on some prompts, which is
-# numerics, not a kernel bug — so each arch runs a prompt seed where the
-# greedy argmax has headroom.
-PARITY_CASES = [("minicpm-2b", 7), ("moonshot-v1-16b-a3b", 0),
-                ("recurrentgemma-2b", 7)]
+# sdpa_append now keeps softmax probs and the value accumulation in fp32
+# like the fused kernel does, which shrank the gather-vs-fused attention
+# divergence from ~1 ulp of bf16 (the old prob rounding) down to fp32
+# summation-order noise.  Dense and hybrid parity is seed-robust after the
+# change (each arch previously needed a hand-picked seed where greedy
+# argmax had headroom).  The attention *output* still rounds to bf16,
+# though, and the MoE router's discreteness can amplify that last bit on
+# unlucky prompts — so the MoE seed below still wants headroom, it is just
+# no longer knife-edge (most small seeds pass).
+PARITY_CASES = [("minicpm-2b", 0), ("moonshot-v1-16b-a3b", 0),
+                ("recurrentgemma-2b", 0)]
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ import json
 import os
 import zlib
 from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -98,7 +99,7 @@ def _arch(name):
     return _ARCH_CACHE[name]
 
 
-def _run_sequence(arch: str, seed: int, log: list = None) -> list:
+def _run_sequence(arch: str, seed: int, log: Optional[list] = None) -> list:
     """One seeded event sequence; appends every event to ``log`` (so a
     caller-owned list survives an assertion failure) and raises on any
     parity or invariant violation."""
@@ -165,7 +166,7 @@ def _run_sequence(arch: str, seed: int, log: list = None) -> list:
             history[fin.session] = np.concatenate(
                 [prompt, got.astype(np.int32)])
 
-    for ev in range(N_EVENTS):
+    for _ev in range(N_EVENTS):
         for sess in sessions:
             if sess not in inflight and rng.random() < 0.35:
                 submit(sess)

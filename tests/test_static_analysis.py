@@ -1,0 +1,474 @@
+"""The repo-aware static-analysis suite: every rule must flag its seeded
+violation and pass its clean counterpart, the suppression pragma must
+waive findings only when justified, the JSON report must keep its schema
+(CI archives it as an artifact), and — the point of the whole exercise —
+a self-run over ``src/`` must come back clean."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze, default_rules, render_json
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.engine import RepoContext
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run(tmp_path, source, name="fixture.py", rules=None):
+    f = tmp_path / name
+    f.write_text(source)
+    return analyze([f], rules=rules)
+
+
+def rule_ids(report):
+    return [f.rule for f in report.findings]
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+
+BAD_JIT = """
+import random
+import jax
+
+class Sched:
+    def build(self):
+        self._decode = jax.jit(self._step)
+
+    def _step(self, x):
+        self.log.append(1)                 # container mutation
+        self._key = self._key + 1          # host-state write
+        return self._helper(x) + random.random()
+
+    def _helper(self, x, scratch=[]):      # mutable default
+        import time
+        return x + time.time()
+
+def make_decode_step(model):
+    def step(params, cache):
+        open("/tmp/x")                     # host IO
+        return params
+    return step
+"""
+
+GOOD_JIT = """
+import jax
+import jax.numpy as jnp
+
+class Sched:
+    def build(self):
+        self._decode = jax.jit(self._step)
+
+    def _step(self, x, key):
+        return self._helper(x) * jax.random.uniform(key)
+
+    def _helper(self, x):
+        return jnp.tanh(x)
+
+    def host_side(self):
+        self.counter = 1          # not jit-reachable: allowed
+"""
+
+
+def test_jit_purity_flags_host_effects(tmp_path):
+    report = run(tmp_path, BAD_JIT)
+    msgs = [f.message for f in report.findings]
+    assert all(r == "jit-purity" for r in rule_ids(report))
+    assert any("mutates host container" in m for m in msgs)
+    assert any("writes host state through `self`" in m for m in msgs)
+    assert any("random.random" in m for m in msgs)
+    assert any("time.time" in m for m in msgs), \
+        "call-graph closure must reach `_helper` via `self._helper(x)`"
+    assert any("mutable default" in m for m in msgs)
+    assert any("`step`" in m and "open()" in m for m in msgs), \
+        "make_* factory inner functions are jit roots"
+
+
+def test_jit_purity_passes_pure_traced_code(tmp_path):
+    assert run(tmp_path, GOOD_JIT).findings == []
+
+
+def test_jit_purity_resolves_dotted_cross_module_roots(tmp_path):
+    pkg = tmp_path / "repro"
+    (pkg / "models").mkdir(parents=True)
+    (pkg / "serve").mkdir()
+    for d in (pkg, pkg / "models", pkg / "serve"):
+        (d / "__init__.py").write_text("")
+    (pkg / "models" / "helpers.py").write_text(
+        "import time\n"
+        "def gather(c, rows):\n"
+        "    return c + time.time()\n")    # impure, only flagged if rooted
+    (pkg / "serve" / "driver.py").write_text(
+        "import jax\n"
+        "from ..models import helpers\n"
+        "extract = jax.jit(helpers.gather)\n")
+    report = analyze([pkg])
+    assert any(f.rule == "jit-purity" and "helpers.py" in f.path
+               for f in report.findings), \
+        "jax.jit(module.fn) must root fn in the *other* module"
+
+
+# ---------------------------------------------------------------------------
+# allocator-discipline
+# ---------------------------------------------------------------------------
+
+
+BAD_ALLOC = """
+def leak_on_exception(allocator, n):
+    pids = allocator.alloc(n)
+    try:
+        validate(n)
+    except ValueError:
+        return None            # leaks pids
+    allocator.release(pids)
+
+def drops_result(allocator):
+    allocator.alloc(2)
+
+def frees(allocator, pids):
+    allocator.free(pids)
+
+def share_unrecorded(allocator, pid, cond):
+    allocator.share([pid])
+    if cond:
+        return True            # reference never recorded on this path
+    table[0] = pid
+"""
+
+GOOD_ALLOC = """
+def clean_exception_path(allocator, slot, n):
+    pids = allocator.alloc(n)
+    try:
+        validate(n)
+    except ValueError:
+        allocator.release(pids)
+        return None
+    slot.pages = list(pids)
+
+def direct_consume(allocator, slot):
+    slot.pages.append(allocator.alloc(1)[0])
+
+def share_recorded(index, allocator, pid, h):
+    allocator.share([pid])
+    index._pages[h] = int(pid)
+
+def transfer_to_callee(allocator, slot, n):
+    pids = allocator.alloc(n)
+    install(slot, pids)        # ownership handed to the callee
+"""
+
+
+def test_allocator_flags_leaks(tmp_path):
+    report = run(tmp_path, BAD_ALLOC)
+    assert all(r == "allocator-discipline" for r in rule_ids(report))
+    msgs = [f.message for f in report.findings]
+    assert any("exception path" in m for m in msgs), \
+        "the try/except leak must be attributed to the exception path"
+    assert any("dropped" in m for m in msgs)
+    assert any("free(" in m and "release()" in m for m in msgs)
+    assert any("share()" in m for m in msgs)
+    assert len(report.findings) == 4
+
+
+def test_allocator_passes_disciplined_paths(tmp_path):
+    assert run(tmp_path, GOOD_ALLOC).findings == []
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+
+BAD_LIFECYCLE = """
+from repro.serve.lifecycle import SlotState
+
+def bypass(slot):
+    slot.state = SlotState.ACTIVE
+
+def illegal_chain(slot):
+    slot.to(SlotState.EMPTY).to(SlotState.ACTIVE)
+
+def illegal_guarded(slot):
+    if slot.state is SlotState.ACTIVE:
+        slot.to(SlotState.ADMITTING)
+
+def typo(slot):
+    return slot.state is SlotState.ACTIV
+
+def sneaky_reset(slot):
+    slot.force_empty()
+"""
+
+GOOD_LIFECYCLE = """
+from repro.serve.lifecycle import SlotState
+
+def admit(slot):
+    slot.to(SlotState.ADMITTING).to(SlotState.ACTIVE)
+
+def drain(slot):
+    if slot.state is SlotState.ACTIVE:
+        slot.to(SlotState.DRAINED)
+
+def reset(slots):
+    return [s.force_empty() for s in slots]
+
+def record_state(rec, value):
+    rec.state = value      # some other .state attribute, not a SlotState
+"""
+
+
+def test_lifecycle_flags_bypass_and_illegal_edges(tmp_path):
+    report = run(tmp_path, BAD_LIFECYCLE)
+    assert all(r == "lifecycle" for r in rule_ids(report))
+    msgs = [f.message for f in report.findings]
+    assert any("bypasses the transition table" in m for m in msgs)
+    assert any("EMPTY -> ACTIVE" in m for m in msgs)
+    assert any("ACTIVE -> ADMITTING" in m for m in msgs)
+    assert any("SlotState.ACTIV" in m for m in msgs)
+    assert any("force_empty() outside reset()" in m for m in msgs)
+
+
+def test_lifecycle_passes_table_conforming_code(tmp_path):
+    assert run(tmp_path, GOOD_LIFECYCLE).findings == []
+
+
+def test_lifecycle_table_parsed_from_source():
+    ctx = RepoContext()
+    from repro.serve.lifecycle import TRANSITIONS, SlotState
+    assert ctx.states == {s.name for s in SlotState}
+    assert ctx.transitions == {
+        src.name: {d.name for d in dsts} for src, dsts in TRANSITIONS.items()}
+
+
+# ---------------------------------------------------------------------------
+# kernel-rules
+# ---------------------------------------------------------------------------
+
+
+BAD_KERNEL = """
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def _kernel(pt_ref, q_ref, k_ref, o_ref, acc_ref):
+    page = pt_ref[0, 0]
+    s = jax.lax.dot_general(q_ref[0, 0], k_ref[0, 0],
+                            (((1,), (1,)), ((), ())))
+    o_ref[0, 0] = s
+
+def run(q, k, pt):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((8, 8), jnp.bfloat16)],
+        interpret=True,
+    )(pt, q, k)
+"""
+
+GOOD_KERNEL = """
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.runtime import resolve_interpret
+
+def _kernel(pt_ref, q_ref, k_ref, o_ref, acc_ref):
+    mask = pt_ref[0, 0] >= 0
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    o_ref[0, 0] = jnp.where(mask, s, 0.0)
+
+def _index(pt, b, j):
+    return jnp.maximum(pt[b, j], 0)
+
+def run(q, k, pt, interpret=None):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(pt, q, k)
+"""
+
+
+def test_kernel_rules_flag_hygiene_violations(tmp_path):
+    report = run(tmp_path, BAD_KERNEL)
+    assert all(r == "kernel-rules" for r in rule_ids(report))
+    msgs = [f.message for f in report.findings]
+    assert any("interpret=True" in m for m in msgs)
+    assert any("VMEM scratch dtype" in m and "bfloat16" in m for m in msgs)
+    assert any("raw ref load" in m for m in msgs)
+    assert any("page-table load" in m for m in msgs)
+
+
+def test_kernel_rules_pass_hygienic_kernel(tmp_path):
+    assert run(tmp_path, GOOD_KERNEL).findings == []
+
+
+# ---------------------------------------------------------------------------
+# sharding-registry
+# ---------------------------------------------------------------------------
+
+
+BAD_SHARDING = """
+import jax
+from jax.sharding import PartitionSpec as P
+
+SPEC = P("modle", None)
+HIER = P(("pod", "dta"), "model")
+
+def mesh():
+    return jax.make_mesh((2, 2), ("data", "modell"))
+"""
+
+GOOD_SHARDING = """
+import jax
+from jax.sharding import PartitionSpec as P
+
+P2 = P
+SPEC = P("model", None)
+HIER = P2(("pod", "data"), "model")
+
+def mesh():
+    return jax.make_mesh((2, 2), ("data", "model"))
+"""
+
+
+def test_sharding_flags_unregistered_axes(tmp_path):
+    report = run(tmp_path, BAD_SHARDING)
+    assert all(r == "sharding-registry" for r in rule_ids(report))
+    flagged = {f.message.split("'")[1] for f in report.findings}
+    assert flagged == {"modle", "dta", "modell"}
+
+
+def test_sharding_passes_registered_axes(tmp_path):
+    assert run(tmp_path, GOOD_SHARDING).findings == []
+
+
+def test_registry_matches_runtime():
+    from repro.dist.sharding import MESH_AXES
+    assert RepoContext().mesh_axes == set(MESH_AXES)
+
+
+# ---------------------------------------------------------------------------
+# suppression pragma
+# ---------------------------------------------------------------------------
+
+
+def test_pragma_suppresses_with_reason(tmp_path):
+    report = run(tmp_path, (
+        "def f(allocator, pids):\n"
+        "    allocator.free(pids)"
+        "  # repro: allow(allocator-discipline) -- teardown of a test pool\n"))
+    assert report.findings == []
+    assert len(report.suppressed) == 1
+    assert report.suppressed[0].reason == "teardown of a test pool"
+    assert report.ok
+
+
+def test_pragma_on_preceding_line(tmp_path):
+    report = run(tmp_path, (
+        "def f(allocator, pids):\n"
+        "    # repro: allow(allocator-discipline) -- teardown\n"
+        "    allocator.free(pids)\n"))
+    assert report.findings == [] and len(report.suppressed) == 1
+
+
+def test_pragma_without_reason_does_not_suppress(tmp_path):
+    report = run(tmp_path, (
+        "def f(allocator, pids):\n"
+        "    allocator.free(pids)  # repro: allow(allocator-discipline)\n"))
+    rules = rule_ids(report)
+    assert "allocator-discipline" in rules, "unjustified pragma must not waive"
+    assert "pragma" in rules, "the malformed pragma is itself reported"
+
+
+def test_pragma_for_other_rule_does_not_suppress(tmp_path):
+    report = run(tmp_path, (
+        "def f(allocator, pids):\n"
+        "    allocator.free(pids)  # repro: allow(lifecycle) -- wrong rule\n"))
+    assert "allocator-discipline" in rule_ids(report)
+
+
+def test_stale_pragma_is_flagged(tmp_path):
+    report = run(tmp_path,
+                 "X = 1  # repro: allow(lifecycle) -- excuses nothing\n")
+    assert rule_ids(report) == ["pragma"]
+    assert "stale" in report.findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# JSON schema + CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_json_report_schema(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text(BAD_SHARDING)
+    doc = json.loads(render_json(analyze([f])))
+    assert doc["version"] == 1 and doc["tool"] == "repro.analysis"
+    assert doc["files_scanned"] == 1 and doc["ok"] is False
+    assert {r["id"] for r in doc["rules"]} == {
+        "jit-purity", "allocator-discipline", "lifecycle", "kernel-rules",
+        "sharding-registry"}
+    for finding in doc["findings"]:
+        assert set(finding) >= {"rule", "path", "line", "col", "message"}
+        assert isinstance(finding["line"], int) and finding["line"] > 0
+    assert doc["suppressed"] == []
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(BAD_SHARDING)
+    good = tmp_path / "good.py"
+    good.write_text(GOOD_SHARDING)
+    assert cli_main([str(good)]) == 0
+    assert cli_main([str(bad)]) == 1, "seeded violation must fail the CI gate"
+    assert cli_main([str(tmp_path / "missing.py")]) == 2
+    assert cli_main(["--rules", "no-such-rule", str(good)]) == 2
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "jit-purity" in out
+
+
+def test_cli_rule_selection(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(BAD_SHARDING)
+    assert cli_main([str(bad), "--rules", "lifecycle"]) == 0
+    assert cli_main([str(bad), "--rules", "sharding-registry"]) == 1
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    report = run(tmp_path, "def broken(:\n")
+    assert rule_ids(report) == ["parse-error"]
+
+
+# ---------------------------------------------------------------------------
+# the gate itself: src/ is clean
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_is_clean():
+    report = analyze([REPO / "src"])
+    assert len(report.files) > 80
+    assert report.findings == [], "\n".join(
+        f.render() for f in report.findings)
+
+
+def test_rule_table_is_stable():
+    assert [r.id for r in default_rules()] == [
+        "jit-purity", "allocator-discipline", "lifecycle", "kernel-rules",
+        "sharding-registry"]
+    assert all(r.summary for r in default_rules())
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
