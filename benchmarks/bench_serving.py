@@ -13,7 +13,10 @@ prompt/decode lengths) through
     prefill,
 
 and reports req/invoke (batch occupancy), tokens/s (simulated), decode-slot
-occupancy, $/1k tokens, and the KV memory footprint.  A second cell drives
+occupancy, $/1k tokens, and the KV memory footprint.  A speculation cell
+re-runs one request soup with draft-and-verify speculative decoding off vs
+on (self-draft) and reports acceptance rate and target steps per emitted
+token at asserted-identical outputs.  A second cell drives
 the scheduler directly with one **long-prompt interloper** arriving into a
 busy decode batch and measures per-step wall latency: a monolithic ring
 admission stalls every slot for the full prefill, a chunked paged admission
@@ -345,6 +348,69 @@ def _multiturn_cell(cfg, model, params, *, sharing, page_size=8, sys_len=16,
     }
 
 
+SPEC_K = 3              # draft tokens proposed per verify round
+SPEC_REQUESTS = 8
+SPEC_SESSIONS = 4
+
+
+def _speculation_cell(cfg, model, params, *, spec, page_size=8, prompt_len=12,
+                      max_new=10, prefill_chunk=8, n_slots=4, max_seq=32):
+    """Draft-and-verify speculative decoding, off vs on (self-draft).
+
+    The same request soup runs through the scheduler with speculation off
+    (one decode step per token) and on (the draft proposes ``SPEC_K`` tokens
+    per slot, the target verifies them in one chunked step over the shared
+    paged pool, rejections roll back through the CoW/free-list machinery).
+    Outputs must be identical — acceptance only buys *speed*, never changes
+    a token (every emitted token is the target's own greedy argmax over a
+    canonical prefix).  Reported: scheduler steps, verify rounds, acceptance
+    rate, and target steps per emitted token (1.0 = no speedup,
+    1/(k+1) = every proposal accepted).  Self-draft acceptance is high but
+    not 1.0: the draft runs its own ring cache with its own chunk
+    boundaries, so low-bit drift occasionally flips an argmax — exactly the
+    disagreement the verify step is there to absorb.
+    """
+    import numpy as np
+
+    from repro.serve.scheduler import DecodeScheduler
+
+    kw = (dict(draft_model=model, draft_params=params, spec_k=SPEC_K)
+          if spec else {})
+    sched = DecodeScheduler(model, params, n_slots=n_slots, max_seq=max_seq,
+                            page_size=page_size, prefill_chunk=prefill_chunk,
+                            **kw)
+    rng = np.random.default_rng(0)
+    for i in range(SPEC_REQUESTS):
+        sched.submit(f"c{i % SPEC_SESSIONS}", f"r{i}",
+                     rng.integers(0, cfg.vocab,
+                                  size=prompt_len).astype(np.int32),
+                     max_new)
+    outputs = {}
+    steps = 0
+    while sched.busy():
+        for fin in sched.step():
+            outputs[fin.request_id] = np.asarray(fin.tokens).tolist()
+        steps += 1
+        assert steps < 2000, "speculation cell failed to drain"
+    emitted = SPEC_REQUESTS * max_new
+    row = {
+        "speculation": spec,
+        "steps": steps,
+        "tokens": emitted,
+        "steps_per_token": round(steps / emitted, 3),
+        "outputs": outputs,
+    }
+    if spec:
+        ss = sched.spec_stats()
+        row.update({
+            "spec_k": ss["spec_k"],
+            "verify_rounds": ss["spec_rounds"],
+            "acceptance_rate": round(ss["spec_acceptance_rate"], 3),
+            "target_steps_per_token": round(ss["spec_steps_per_token"], 3),
+        })
+    return row
+
+
 def run(n: int = 32, arch: str = "minicpm-2b", sessions: int = 8,
         prompt_len: int = 16, max_new: int = 8, batch_size: int = 8):
     import jax
@@ -408,6 +474,21 @@ def run(n: int = 32, arch: str = "minicpm-2b", sessions: int = 8,
              "index_hits", "cow_splits", "kv_pages_high_water",
              "kv_high_water_kib", "park_storage_ops_usd"]))
 
+    sp = [_speculation_cell(cfg, model, params, spec=s)
+          for s in (False, True)]
+    sp_off, sp_on = sp
+    # the speculation invariant: acceptance buys speed, never tokens
+    assert sp_off["outputs"] == sp_on["outputs"], \
+        "speculative decoding changed the generated tokens"
+    for row in sp:
+        row.pop("outputs")
+    print(table(
+        f"speculative decoding: {SPEC_REQUESTS} requests / {SPEC_SESSIONS} "
+        f"sessions, self-draft k={SPEC_K} — scheduler steps per emitted "
+        "token with draft-and-verify off vs on (identical outputs)",
+        sp, ["speculation", "steps", "tokens", "steps_per_token",
+             "verify_rounds", "acceptance_rate", "target_steps_per_token"]))
+
     i_off, i_on = idle
     stall_freed = 1.0 - (i_on["hot_stall_total_steps"]
                          / max(i_off["hot_stall_total_steps"], 1))
@@ -453,6 +534,15 @@ def run(n: int = 32, arch: str = "minicpm-2b", sessions: int = 8,
             mt_on["prefill_later_turns"]
             * 2 <= mt_off["prefill_later_turns"]),
         "multiturn_outputs_identical": True,   # asserted above
+        # draft-and-verify speculation: steps-per-token off vs on at
+        # identical outputs — the draft's cost rides in extra dispatches per
+        # round, the win is fewer target decode steps per emitted token
+        "speculation": {"spec_off": sp_off, "spec_on": sp_on},
+        "spec_acceptance_rate": sp_on["acceptance_rate"],
+        "spec_steps_per_token": sp_on["target_steps_per_token"],
+        "spec_step_reduction": round(sp_off["steps"] / sp_on["steps"], 2),
+        "spec_fewer_steps_than_baseline": sp_on["steps"] < sp_off["steps"],
+        "spec_outputs_identical": True,        # asserted above
     }
     print(f"\ncontinuous(paged) vs per-session: "
           f"{summary['invocation_reduction']}x fewer invocations, "
@@ -463,10 +553,16 @@ def run(n: int = 32, arch: str = "minicpm-2b", sessions: int = 8,
           f"{100 * summary['offload_stall_freed_frac']:.0f}% of hot-session "
           f"admission-stall steps for ${i_on['storage_usd']:.6f} of storage ops; "
           f"prefix sharing + parking cut turn>=2 prefill "
-          f"{summary['multiturn_prefill_reduction']}x with identical outputs")
+          f"{summary['multiturn_prefill_reduction']}x with identical outputs; "
+          f"speculation (self-draft k={SPEC_K}) cuts scheduler steps "
+          f"{summary['spec_step_reduction']}x at "
+          f"{summary['spec_acceptance_rate']:.2f} acceptance, "
+          f"identical outputs")
     assert summary["paged_kv_below_ring"], (i_ring, i_paged)
     assert summary["offload_frees_half_the_stalls"], (i_off, i_on)
     assert summary["multiturn_prefill_halved"], (mt_off, mt_on)
+    assert summary["spec_fewer_steps_than_baseline"], (sp_off, sp_on)
+    assert summary["spec_steps_per_token"] <= 0.75, sp_on
     save_artifact("BENCH_serving", summary)
     return summary
 

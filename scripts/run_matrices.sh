@@ -3,9 +3,10 @@
 # lowered AND compiled against 512 spoofed host devices, and the per-cell
 # memory / flops / wire-bytes records land in artifacts/dryrun_matrix.json
 # (consumed by tests/test_system.py::test_dryrun_matrix_artifact_complete).
-# Decode cells run on BOTH dispatch paths (--kernel both): the classic
-# gathered ring and the fused Pallas paged-attention pool, so a sharding
-# regression in either layout fails the wire-bytes gate as a named cell.
+# Decode cells run on every dispatch path (--kernel both): the classic
+# gathered ring, the fused Pallas paged-attention pool, and the speculative
+# verify chunk (S = spec_k + 1 over the paged pool), so a sharding
+# regression in any layout fails the wire-bytes gate as a named cell.
 #
 # Usage:  scripts/run_matrices.sh [out.json]
 #

@@ -72,6 +72,13 @@ def _extra_prefill_args(cfg: ArchConfig, shape: ShapeSpec):
 PAGED_KERNEL_FAMILIES = ("dense", "moe", "hybrid")
 DRYRUN_PAGE_SIZE = 16
 
+# -- speculative-verify dispatch axis ----------------------------------------
+# `kernel='spec'` lowers the draft-and-verify round's target half: one
+# chunked decode step scoring spec_k + 1 tokens per slot against the paged
+# pool (gather dispatch — the fused kernel is S=1-only).  Same applicability
+# as the paged cells: the verify chunk only exists where the pool does.
+DRYRUN_SPEC_K = 3
+
 
 def paged_kernel_applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
     """The fused kernel serves attention layers from the paged pool: decode
@@ -110,13 +117,17 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     shape = SHAPES_BY_NAME[shape_name]
     if shape_name not in cfg.shapes:
         raise ValueError(f"{arch} skips {shape_name} (cfg.shapes={cfg.shapes})")
-    if kernel == "paged":
+    if kernel in ("paged", "spec"):
         if not paged_kernel_applicable(cfg, shape):
-            raise ValueError(f"{arch} x {shape_name} has no paged-kernel "
+            raise ValueError(f"{arch} x {shape_name} has no paged-pool "
                              f"decode path (family={cfg.family!r})")
-        cfg = dataclasses.replace(cfg, attn_backend="paged_kernel")
+        if kernel == "paged":
+            cfg = dataclasses.replace(cfg, attn_backend="paged_kernel")
+        # spec keeps gather dispatch: the verify chunk is S = spec_k + 1
+        # tokens and the fused kernel is S=1-only
     elif kernel != "gather":
-        raise ValueError(f"kernel must be 'gather' or 'paged', got {kernel!r}")
+        raise ValueError(
+            f"kernel must be 'gather', 'paged' or 'spec', got {kernel!r}")
     mesh = make_production_mesh(multi_pod=multi_pod)
     model = build_model(cfg)
     p_abs = abstract_params(model)
@@ -157,7 +168,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lowered = jitted.lower(p_abs, tok_abs, *extra)
         else:  # decode
             B = shape.global_batch
-            if kernel == "paged":
+            if kernel in ("paged", "spec"):
                 # same KV capacity as the ring cell, laid out as the shared
                 # pool + page table the serving scheduler actually decodes
                 # against (exact-fit pool: B slots x max_pages each)
@@ -170,7 +181,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 cache_abs = _sds(jax.eval_shape(
                     lambda: model.init_cache(B, shape.seq_len)))
             c_sh = shd.cache_shardings(cache_abs, mesh)
-            tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            # spec lowers the verify chunk: spec_k + 1 tokens per slot in
+            # one chunked decode step (the speculative round's target half)
+            S = DRYRUN_SPEC_K + 1 if kernel == "spec" else 1
+            tok_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
             t_sh = shd.batch_shardings({"tokens": tok_abs}, mesh)["tokens"]
             step = make_decode_step(model)
             jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
@@ -179,7 +193,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lowered = jitted.lower(p_abs, cache_abs, tok_abs)
 
     meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
-            **({"kernel": "paged"} if kernel == "paged" else {}),
+            **({"kernel": kernel} if kernel != "gather" else {}),
             "mesh": "2x16x16" if multi_pod else "16x16",
             "n_chips": 512 if multi_pod else 256,
             "param_count": cfg.param_count(),
@@ -289,8 +303,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
                compile_cell: bool = True, kernel_mode: str = "gather", **kw):
     """``kernel_mode``: 'gather' is the classic matrix; 'paged' runs only
-    the fused paged-kernel decode cells; 'both' appends them to the classic
-    matrix (the full 84-cell artifact)."""
+    the fused paged-kernel decode cells; 'spec' only the speculative
+    verify-chunk decode cells; 'both' appends paged + spec to the classic
+    matrix (the full 102-cell artifact)."""
     results = []
     archs = archs or configs.list_archs()
     for arch in archs:
@@ -298,16 +313,16 @@ def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
         for shape_name in (shapes or cfg.shapes):
             if shape_name not in cfg.shapes:
                 continue
-            kernels = ["gather"] if kernel_mode == "gather" else ["paged"]
-            if kernel_mode == "both":
-                kernels = ["gather", "paged"]
+            kernels = ({"gather": ["gather"], "paged": ["paged"],
+                        "spec": ["spec"],
+                        "both": ["gather", "paged", "spec"]}[kernel_mode])
             for kern in kernels:
-                if kern == "paged" and not paged_kernel_applicable(
+                if kern != "gather" and not paged_kernel_applicable(
                         cfg, SHAPES_BY_NAME[shape_name]):
                     continue
                 for multi_pod in ([False, True] if mesh_mode == "both"
                                   else [mesh_mode == "multi"]):
-                    tag = " [paged]" if kern == "paged" else ""
+                    tag = f" [{kern}]" if kern != "gather" else ""
                     print(f"=== {arch} x {shape_name} x "
                           f"{'2x16x16' if multi_pod else '16x16'}{tag} ===",
                           flush=True)
@@ -342,10 +357,11 @@ def main() -> None:
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--kernel", default="gather",
-                    choices=["gather", "paged", "both"],
+                    choices=["gather", "paged", "spec", "both"],
                     help="decode dispatch axis: 'paged' lowers only the "
-                         "fused paged-attention decode cells, 'both' appends "
-                         "them to the classic matrix")
+                         "fused paged-attention decode cells, 'spec' only "
+                         "the speculative verify-chunk cells, 'both' appends "
+                         "paged + spec to the classic matrix")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--out", default=None)

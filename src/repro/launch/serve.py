@@ -113,7 +113,9 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    prefix_sharing: bool = False,
                    park_sessions: bool = False,
                    park_ttl_steps: int = 0,
-                   attn_backend: str = "gather") -> ServingFrontend:
+                   attn_backend: str = "gather",
+                   draft_model=None, draft_params=None,
+                   spec_k: int = 0) -> ServingFrontend:
     """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
 
     ``continuous`` falls back to the shared whole-batch flavour for families
@@ -124,6 +126,9 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
     indexed prompt prefixes read-only with copy-on-write splits;
     ``park_sessions`` retains a completed session's KV across requests
     (``park_ttl_steps`` bounds the retention window; paged mode only).
+    ``draft_model``/``draft_params`` + ``spec_k >= 1`` turn on draft-and-
+    verify speculative decoding (greedy, paged, gather backend only —
+    output is token-for-token what non-speculative decode produces).
     """
     if mode not in ("continuous", "shared", "per-session"):
         raise ValueError(f"unknown serving mode {mode!r}")
@@ -146,7 +151,9 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                                 prefix_sharing=prefix_sharing,
                                 park_sessions=park_sessions,
                                 park_ttl_steps=park_ttl_steps,
-                                attn_backend=attn_backend)
+                                attn_backend=attn_backend,
+                                draft_model=draft_model,
+                                draft_params=draft_params, spec_k=spec_k)
         return ServingFrontend(cloud, scheduler=sched, batch_size=batch_size)
     if temperature or top_k:
         raise ValueError(
@@ -195,10 +202,20 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 offload: bool = False, preempt_policy: Optional[str] = None,
                 idle_preempt_steps: int = 0,
                 prefix_sharing: bool = False, park_sessions: bool = False,
-                park_ttl_steps: int = 0, attn_backend: str = "gather"):
+                park_ttl_steps: int = 0, attn_backend: str = "gather",
+                spec_draft: Optional[str] = None, spec_k: int = 0):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+
+    draft_model = draft_params = None
+    if spec_draft is not None:
+        if spec_draft == arch:              # self-draft: reuse the weights
+            draft_model, draft_params = model, params
+        else:
+            draft_model = build_model(configs.get(spec_draft).reduced())
+            draft_params = draft_model.init(jax.random.key(0))
+        spec_k = spec_k or 3
 
     cloud = SimCloud(seed=seed)
     frontend = build_frontend(cloud, cfg, model, params, mode=mode,
@@ -212,7 +229,9 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                               prefix_sharing=prefix_sharing,
                               park_sessions=park_sessions,
                               park_ttl_steps=park_ttl_steps,
-                              attn_backend=attn_backend)
+                              attn_backend=attn_backend,
+                              draft_model=draft_model,
+                              draft_params=draft_params, spec_k=spec_k)
     t0 = time.time()
     spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
                    sessions=sessions, prompt_len=prompt_len, max_new=max_new)
@@ -250,6 +269,12 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                       f"{s['restore_bytes']/1024:.1f} KiB restored "
                       f"({s['offload_puts']} puts / {s['offload_gets']} gets, "
                       f"storage ${s.get('offload_storage_usd', 0.0):.6f})")
+            if "spec_rounds" in s:
+                print(f"speculation: k={s['spec_k']}, {s['spec_rounds']} "
+                      f"rounds, acceptance "
+                      f"{s['spec_acceptance_rate']:.2f}, "
+                      f"{s['spec_steps_per_token']:.2f} steps/token "
+                      f"({s['spec_emitted']} tokens emitted)")
             if "shared_prefix_tokens" in s:
                 print(f"prefix sharing: {s['shared_prefix_tokens']} prompt "
                       f"tokens served from resident pages "
@@ -307,6 +332,14 @@ def main() -> None:
                     help="decode attention over the paged pool: materialize "
                          "the gathered view in HBM (reference) or stream "
                          "pages through the Pallas table-indirect kernel")
+    ap.add_argument("--spec-draft", default=None, choices=configs.list_archs(),
+                    help="draft arch for draft-and-verify speculative "
+                         "decoding (same arch = self-draft; greedy + paged + "
+                         "gather backend only; output stays token-identical "
+                         "to non-speculative decode)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft tokens proposed per verify round "
+                         "(default 3 when --spec-draft is set)")
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
                 sessions=args.sessions, batch_size=args.batch_size,
@@ -319,7 +352,8 @@ def main() -> None:
                 prefix_sharing=args.prefix_sharing,
                 park_sessions=args.park_sessions,
                 park_ttl_steps=args.park_ttl_steps,
-                attn_backend=args.attn_backend)
+                attn_backend=args.attn_backend,
+                spec_draft=args.spec_draft, spec_k=args.spec_k)
 
 
 if __name__ == "__main__":

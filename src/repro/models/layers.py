@@ -220,10 +220,12 @@ def sdpa_append(q: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
                 kv_valid: jnp.ndarray) -> jnp.ndarray:
     """Single-token decode attention over (old cache || new token).
 
-    Avoids re-reading the just-updated cache: scores against the *pre-update*
-    cache plus an explicit rank-1 term for the new token, combined in one
-    softmax (§Perf cell-3: the read-after-write of the full ring was a
-    dominant decode bytes term).  q/k_new/v_new: (B, 1, H*, D).
+    Scores against the *pre-update* cache plus an explicit rank-1 term for
+    the new token, combined in one softmax — the reference semantics of the
+    fused paged kernel (which streams the pre-update pool and appends the
+    new token in fp32).  No longer on the gather decode path: S=1 decode
+    rides the chunked ``sdpa`` formulation so decode-written KV is bitwise
+    prefill KV.  q/k_new/v_new: (B, 1, H*, D).
     """
     B, S, H, D = q.shape
     Hkv = ck.shape[2]

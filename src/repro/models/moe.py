@@ -325,12 +325,9 @@ class MoELM(DenseLM):
             o = kvcache.paged_attn_decode(layer_cache, q, pos,
                                           window=cfg.sliding_window,
                                           k_new=k, v_new=v)
-        elif S == 1:  # write-only cache update + append-attention (§Perf cell 3)
-            ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache, upto=pos)
-            o = layers.sdpa_append(q, ck, cv, k, v, window=cfg.sliding_window,
-                                   q_positions=positions, kv_positions=kv_pos,
-                                   kv_valid=kv_valid)
         else:
+            # S=1 rides the chunk path (post-update view) so decode-written
+            # KV is bitwise prefill KV — see dense_layer_decode.
             ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache, upto=pos + S)
             o = layers.sdpa(q, ck, cv, causal=True, window=cfg.sliding_window,
                             q_positions=positions, kv_positions=kv_pos,

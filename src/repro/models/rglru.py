@@ -32,6 +32,16 @@ from .transformer import DenseLM, remat_wrap
 
 C_RGLRU = 8.0
 
+# Chunks up to this length run the recurrence as a strict left fold
+# (``lax.scan``) instead of the log-depth ``associative_scan``.  The left
+# fold computes h_t = a_t*h_{t-1} + b_t in exactly the order a sequence of
+# S=1 decode steps would, so a short chunk (spec-decode verify, chunked
+# prefill tail) is bitwise-identical to stepping token by token — the
+# invariant accept/reject speculation relies on.  associative_scan happens
+# to be left-fold-exact for S <= 3 but reassociates (and drifts in low fp32
+# bits) from S = 4; long prefill keeps the log-depth form for perf.
+RGLRU_LEFT_FOLD_MAX = 16
+
 
 # ---------------------------------------------------------------------------
 # RG-LRU core
@@ -46,6 +56,19 @@ def rglru_scan(x_in: jnp.ndarray, a: jnp.ndarray,
     """
     if h0 is not None:
         x_in = x_in.at[:, 0].add(a[:, 0] * h0)
+
+    if x_in.shape[1] <= RGLRU_LEFT_FOLD_MAX:
+        # sequential fold from zero state (h0 already folded into b_0):
+        # a_0*0 + b_0 == b_0 bitwise, and each a_t*h + b_t matches the
+        # fold-in an S=1 step performs, so chunk == token-by-token exactly.
+        def step(h, ab):
+            a_t, b_t = ab
+            h = a_t * h + b_t
+            return h, h
+
+        _, hs = jax.lax.scan(step, jnp.zeros_like(x_in[:, 0]),
+                             (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x_in, 1, 0)))
+        return jnp.moveaxis(hs, 0, 1)
 
     def combine(c1, c2):
         a1, b1 = c1

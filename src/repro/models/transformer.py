@@ -78,14 +78,13 @@ def dense_layer_decode(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
         o = kvcache.paged_attn_decode(layer_cache, q, pos,
                                       window=cfg.sliding_window,
                                       k_new=k, v_new=v)
-    elif S == 1:
-        # steady-state decode: attend the PRE-update cache + an explicit
-        # new-token term; the updated ring is written but never re-read.
-        ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(layer_cache, upto=pos)
-        o = layers.sdpa_append(q, ck, cv, k, v, window=cfg.sliding_window,
-                               q_positions=positions, kv_positions=kv_pos,
-                               kv_valid=kv_valid)
     else:
+        # S=1 steady-state decode is the S-chunk path at S=1: attend the
+        # POST-update view so a decode step computes bit-identically to a
+        # prefill chunk covering the same token.  (The old pre-update
+        # ``sdpa_append`` formulation saved the read-after-write but made
+        # decode-written KV diverge from prefill KV in low bf16 bits,
+        # blocking generated-tail reuse and accept/reject speculation.)
         ck, cv, kv_pos, kv_valid = kvcache.cache_kv_view(new_cache, upto=pos + S)
         o = layers.sdpa(q, ck, cv, causal=True, window=cfg.sliding_window,
                         q_positions=positions, kv_positions=kv_pos, kv_valid=kv_valid)

@@ -42,6 +42,76 @@ def make_chunk_step(model) -> Callable:
     return chunk_step
 
 
+def make_draft_step(model) -> Callable:
+    """Batched S=1 greedy step for the *draft* model of a speculative
+    decoder: one proposed token per masked-in slot against the draft's own
+    per-slot ring cache.  Inactive rows keep their state and their last
+    token — same masking contract as the target's decode step."""
+    from ..models import kvcache
+
+    def draft_step(params, cache, last_tokens, active):
+        logits, new_cache = model.decode_step(params, cache, last_tokens[:, None])
+        new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return new_cache, jnp.where(active, tok, last_tokens)
+
+    return draft_step
+
+
+def make_spec_verify_step(model, *, max_seq: int) -> Callable:
+    """One draft-and-verify round's target half: score ``spec_k + 1`` tokens
+    per slot in a single chunked decode step and accept the longest prefix
+    of drafts that matches the target's own greedy argmax.
+
+    ``verify_tokens[:, 0]`` is each slot's newest canonical token (the
+    sampled-but-unconsumed one) and ``verify_tokens[:, 1:]`` the draft's
+    proposals.  Position ``j``'s argmax ``y[:, j]`` is what the target would
+    have sampled after consuming ``verify_tokens[:, :j+1]`` — so draft
+    ``j+1`` is accepted iff it equals ``y[:, j]``, and ``a`` (the accepted
+    count, clamped per-slot by ``k_eff`` so a slot never overruns its
+    ``max_new`` budget) emits ``a + 1`` tokens: the accepted drafts plus the
+    target's own bonus/correction token.  Exactness is structural, not
+    statistical: every emitted token is the target's argmax conditioned on
+    a fully canonical prefix, so the output stream is token-for-token what
+    S=1 non-speculative decode produces (the S=1 decode path *is* the chunk
+    path at S=1 — the bitwise KV contract this feature stands on).
+
+    The cache write runs ahead: the chunk writes KV for all ``S`` positions,
+    so rejected positions hold non-canonical KV — the returned lengths are
+    rewound to the canonical ``old + a + 1``, which puts those positions
+    past every later read's validity mask until the next round's chunk
+    overwrites them (write-before-read, same contract as prefill chunks).
+    Recurrent (non-KV) rows advance through all ``S`` tokens and cannot be
+    rewound here — hybrid callers snapshot rows before the round and
+    replay the accepted span through the chunk path on partial accepts.
+    """
+    from ..models import kvcache
+
+    def verify(params, cache, verify_tokens, active, k_eff, out_buf, out_pos,
+               last_tokens):
+        B, S = verify_tokens.shape
+        logits, new_cache = model.decode_step(params, cache, verify_tokens)
+        new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+        y = jnp.argmax(logits, axis=-1).astype(jnp.int32)          # (B, S)
+        match = (verify_tokens[:, 1:] == y[:, :-1]).astype(jnp.int32)
+        a = jnp.minimum(jnp.cumprod(match, axis=1).sum(axis=1), k_eff)
+        b = jnp.arange(B, dtype=jnp.int32)
+        for j in range(S):
+            # emitted tokens y[:, :a+1] land on the output ring; masked-out
+            # rows and rejected columns scatter out of bounds -> dropped
+            ok = active & (j <= a)
+            col = jnp.where(ok, out_pos + j, max_seq)
+            out_buf = out_buf.at[b, col].set(y[:, j])
+        last = jnp.take_along_axis(y, a[:, None], axis=1)[:, 0]
+        last_tokens = jnp.where(active, last, last_tokens)
+        out_pos = out_pos + jnp.where(active, a + 1, 0)
+        new_cache["length"] = jnp.where(
+            active, new_cache["length"] - (S - 1 - a), new_cache["length"])
+        return new_cache, y, a, out_buf, out_pos, last_tokens
+
+    return verify
+
+
 def make_offload_steps() -> tuple:
     """Jitted staging steps for storage-backed preemption.
 

@@ -111,6 +111,21 @@ class Slot:
     session: Optional[str] = None      # session whose parked record owns this slot
     parked_step: int = 0               # step the slot entered PARKED (TTL clock)
 
+    # -- speculative-decoding bookkeeping (draft-and-verify, ACTIVE) --------
+    # The draft model keeps its own per-slot ring cache; these host mirrors
+    # track how much of the *canonical* stream (prompt + accepted tokens) the
+    # draft has consumed, and which canonical tokens it still has to catch up
+    # on before proposing the next window.  Rejected proposals advance none
+    # of this — the draft row's device length is rewound to ``draft_len``
+    # after every verify round.
+    draft_len: int = 0                 # canonical tokens the draft consumed
+    spec_pending: List[int] = dataclasses.field(default_factory=list)
+    # ^ canonical tokens the draft must consume next round (prompt + first
+    #   sampled token at admission; 1-2 tokens per round thereafter)
+    spec_last: int = 0                 # host mirror of last_tokens[index] (the
+    # newest canonical token, not yet consumed by the target — the hybrid
+    # rollback replay re-feeds it)
+
     def to(self, new_state: SlotState) -> "Slot":
         if new_state not in TRANSITIONS[self.state]:
             raise IllegalTransition(

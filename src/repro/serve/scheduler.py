@@ -58,7 +58,8 @@ unmapped page table.
 **Refcounted copy-on-write prefix sharing** (``prefix_sharing=True``, paged
 mode): KV pages are a shared resource.  The :class:`kvcache.PageAllocator`
 refcounts every page (alloc/share/release); completed requests publish their
-*full* pages into a content-addressed :class:`kvcache.PrefixIndex` keyed by
+*full* pages — generated span included, since decode-written KV is bitwise
+prefill KV — into a content-addressed :class:`kvcache.PrefixIndex` keyed by
 token-chain hashes, and a new request whose prompt carries an indexed prefix
 maps those pages **read-only** (one extra reference each) and prefills only
 its tail.  Any write through a page with refcount > 1 — a chunked-prefill
@@ -85,6 +86,21 @@ request then restores the blob instead of re-prefilling, trading a storage
 GET + retention for prompt-length compute.  ``park_ttl_steps`` bounds the
 retention window.  ``reset()`` clears the prefix index and the parked
 table: a crash-replayed run must never observe another life's shared state.
+
+**Draft-and-verify speculative decoding** (``draft_model=..., spec_k=k``,
+paged + gather + greedy): a small draft model proposes ``k`` tokens per
+active slot per tick; the target scores all of them (plus the pending
+canonical token) in ONE chunked decode step against the shared paged pool
+and accepts the longest prefix matching its own argmax, emitting 1..k+1
+tokens per round.  The invariant is exactness, not luck: every emitted
+token is the target's greedy argmax over a fully canonical prefix, so the
+output stream is token-for-token identical to the non-speculative run.
+This leans on the same contract that un-blocked generated-tail reuse — an
+S=1 decode step IS the chunk path at S=1 and writes bitwise-identical KV —
+so a verify chunk's accepted span needs no fixup, rejected KV positions
+simply sit past the rewound length until the next round overwrites them,
+and hybrid recurrent rows snapshot/replay around partial accepts
+(:meth:`_spec_round`).
 
 Per-session FIFO is preserved structurally: a session's next request is only
 admitted after its predecessor completes (the ``_active_sessions`` gate), and
@@ -159,12 +175,9 @@ class ParkedSession:
     session: str
     history: np.ndarray         # prompt + generated tokens
     consumed: int               # tokens whose KV/recurrent state is captured
-    prompt_len: int             # tokens whose KV came through the *prefill*
-    # path (chunked sdpa) — bitwise-reproducible by a re-prefill.  Decode-
-    # path KV (append-attention, S=1) differs in low bf16 bits, so pure-
-    # attention families reuse only [0, prompt_len) and re-prefill the
-    # generated tail; hybrid reuses [0, consumed) because its recurrent
-    # rows cannot be rewound (they advanced through the generated tokens).
+    # (decode-written KV is bitwise what a re-prefill would write — the S=1
+    # decode path IS the chunk path at S=1 — so the whole consumed span is
+    # reusable, generated tokens included; no prefill-path/decode-path split)
     page_row: np.ndarray        # logical -> physical page map at park time
     pages: List[int]            # resident page references the record owns
     slot: Optional[int] = None  # still holding its slot (rows live on device)
@@ -199,7 +212,8 @@ class DecodeScheduler:
                  prefix_sharing: bool = False,
                  park_sessions: bool = False,
                  park_ttl_steps: int = 0,
-                 attn_backend: str = "gather"):
+                 attn_backend: str = "gather",
+                 draft_model=None, draft_params=None, spec_k: int = 0):
         if not supports_continuous(model.cfg):
             raise ValueError(
                 f"family {model.cfg.family!r} has no per-slot decode path; "
@@ -243,6 +257,7 @@ class DecodeScheduler:
         self.temperature = temperature
         self.top_k = top_k
         self.kv_mode = kv_mode
+        self._seed = seed
         self._key = jax.random.key(seed)
         self._has_kv = model.cfg.family != "ssm"   # SSM state is ring-free
         self.offload = bool(offload) and kv_mode == "paged" and self._has_kv
@@ -332,6 +347,64 @@ class DecodeScheduler:
                 self.cache = jax.device_put(self.cache, shardings)
 
         self._decode = jax.jit(self._step_impl)
+
+        # -- draft-and-verify speculative decoding --------------------------
+        # The draft proposes spec_k tokens per slot per round; the target
+        # scores all of them (plus the pending canonical token) in ONE
+        # chunked decode step against the shared paged pool and accepts the
+        # longest matching prefix.  Output is token-for-token identical to
+        # non-speculative decode because every emitted token is the target's
+        # greedy argmax over a fully canonical prefix — which requires the
+        # bitwise S=1-decode==chunked-prefill KV contract the models now
+        # hold.  Rejected positions' KV is rewound by length (pool pages
+        # stay mapped; the next round's chunk overwrites before any read),
+        # and hybrid recurrent rows snapshot/replay around partial accepts.
+        self.spec_k = int(spec_k)
+        self._spec = draft_model is not None and self.spec_k >= 1
+        if self._spec:
+            if kv_mode != "paged" or not self._has_kv:
+                raise ValueError(
+                    "speculative decoding verifies chunks against the shared "
+                    "paged pool; it needs kv_mode='paged' and a KV-bearing "
+                    "target (dense/moe/hybrid)")
+            if temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: accept/reject "
+                    "compares the target's argmax, which temperature "
+                    "sampling does not produce")
+            if attn_backend != "gather":
+                raise ValueError(
+                    "speculative decoding needs attn_backend='gather': the "
+                    "fused paged kernel only serves S=1 steps, so a verify "
+                    "chunk would switch dispatch mid-request")
+            if draft_params is None:
+                raise ValueError("spec decoding needs draft_params")
+            if getattr(draft_model.cfg, "family", None) not in ("dense", "moe"):
+                raise ValueError(
+                    "draft family must be dense or moe: the draft rewinds "
+                    "to the accepted prefix every round, which recurrent "
+                    "state cannot do cheaply")
+            if draft_model.cfg.vocab != model.cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_model.cfg.vocab} != target vocab "
+                    f"{model.cfg.vocab}")
+            self.draft_model = draft_model
+            self.draft_params = draft_params
+            # per-slot ring sized for the deepest proposal the draft reaches
+            # (the page table's span can overhang max_seq by a partial page)
+            self.draft_cache = kvcache.batched_cache(
+                draft_model, n_slots,
+                self.max_pages * self.page_size + self.spec_k)
+            from .engine import make_draft_step, make_spec_verify_step
+
+            self._draft_chunk = jax.jit(make_chunk_step(draft_model))
+            self._draft_step = jax.jit(make_draft_step(draft_model))
+            self._verify = jax.jit(make_spec_verify_step(model,
+                                                         max_seq=max_seq))
+        self.spec_rounds = 0
+        self.spec_proposed = 0          # draft tokens offered to the verifier
+        self.spec_accepted = 0          # draft tokens accepted
+        self.spec_emitted = 0           # tokens emitted by verify rounds
 
         self.slots: List[Slot] = [Slot(index=i) for i in range(n_slots)]
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
@@ -514,19 +587,16 @@ class DecodeScheduler:
             eq = prompt[:lim] == rec.history[:lim]
             common = lim if eq.all() else int(np.argmin(eq))
             if self._attention_only:
-                # reuse only the prefill-path span (see ParkedSession): the
-                # generated tail re-prefills, which is bitwise what the
-                # sharing-off scheduler would compute.  Cap at P-2 so the
-                # re-run tail is >= 2 tokens — a 1-token chunk would go
-                # through the S=1 append-attention path and write
-                # decode-flavoured KV into the prefill span
-                C = min(rec.prompt_len, common, P - 2)
+                # reuse everything consumed — generated tokens included
+                # (decode KV is bitwise prefill KV) — capped at P-1: the
+                # last prompt token always re-runs to seed sampling
+                C = min(rec.consumed, common, P - 1)
             else:
                 # recurrent rows advanced through every consumed token and
-                # cannot rewind: all or nothing (and the tail must be >= 2
-                # tokens for the same S=1 reason as above)
+                # cannot rewind: all or nothing, with >= 1 tail token left
+                # to re-run for the seeding logits
                 C = rec.consumed if (common >= rec.consumed
-                                     and P >= rec.consumed + 2) else 0
+                                     and P >= rec.consumed + 1) else 0
             if C > 0:
                 plan.kind = "park-blob" if rec.blob_key else "park"
                 plan.C = C
@@ -540,40 +610,19 @@ class DecodeScheduler:
                 # this session again (per-session FIFO — this req is next)
                 self._drop_record(self._parked.pop(req.session))
                 self.park_misses += 1
-            # else: consistent but too short to reuse (e.g. an exact
-            # resubmission) — keep the journal; completion supersedes it
+            # else: consistent but too short to reuse (hybrid: an exact
+            # resubmission of the recorded history) — keep the journal;
+            # completion supersedes it
         if self._index_sharing:
             if req.hashes is None:
                 req.hashes = kvcache.page_hashes(prompt, self.page_size)
-            k_max = max(0, P - 2) // self.page_size   # tail >= 2 tokens
+            k_max = max(0, P - 1) // self.page_size   # tail >= 1 token
             pids = self.prefix_index.lookup(req.hashes[:k_max])
             if pids:
                 plan.kind = "index"
                 plan.C = len(pids) * self.page_size
                 plan.pages = [int(p) for p in pids]
         return plan
-
-    def _chunk_tail(self, tail: np.ndarray) -> List[np.ndarray]:
-        """Split a prompt tail into prefill chunks, never ending on a
-        1-token chunk when it can be avoided: an S=1 forward goes through
-        the decode append-attention path, whose KV differs from the
-        prefill path in low bf16 bits — enough to flip MoE routing when a
-        later request re-reads the lane.  ``[3, 3, 1]`` becomes
-        ``[3, 2, 2]``.  A 1-token *total* tail, ``prefill_chunk=1``, or an
-        odd tail under ``prefill_chunk=2`` (where shrinking the penultimate
-        chunk would just move the 1) is unavoidable and left alone."""
-        chunk = self.prefill_chunk or len(tail)
-        sizes = [chunk] * (len(tail) // chunk)
-        if len(tail) % chunk:
-            sizes.append(len(tail) % chunk)
-        if len(sizes) >= 2 and sizes[-1] == 1 and sizes[-2] >= 3:
-            sizes[-2] -= 1
-            sizes[-1] = 2
-        out, i = [], 0
-        for s in sizes:
-            out.append(tail[i:i + s])
-            i += s
-        return out
 
     def _plan_pages(self, req: _Request, plan: _MatchPlan) -> int:
         """Reservation size under the plan: full worst case minus the full
@@ -626,7 +675,11 @@ class DecodeScheduler:
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         C = plan.C
         need = self._plan_pages(req, plan)
-        chunks = self._chunk_tail(prompt[C:])
+        # plain chunking — a 1-token final chunk is fine (the S=1 forward IS
+        # the chunk path at S=1 and writes bitwise-identical KV)
+        tail = prompt[C:]
+        size = self.prefill_chunk or len(tail)
+        chunks = [tail[i:i + size] for i in range(0, len(tail), size)]
         in_place = (plan.kind == "park" and plan.record.slot == slot.index)
         if not in_place:
             self.cache = kvcache.cache_clear_slot(self.cache, slot.index)
@@ -666,8 +719,10 @@ class DecodeScheduler:
                 elif rec.state is not None:
                     self.cache = self._scatter_state(
                         self.cache, slot.index, rec.state)
-                # the snapshot's length is rec.consumed; attention families
-                # rewind to the prefill-path span C and re-prefill the rest
+                # the snapshot's length is rec.consumed; rewind to the
+                # matched span C (attention families may reuse less than
+                # consumed when the prompt diverges inside the generated
+                # span or the seeding-tail cap bites)
                 self.cache["length"] = self.cache["length"].at[slot.index].set(C)
                 self.park_hits += 1
             else:
@@ -700,6 +755,13 @@ class DecodeScheduler:
             self.cache["length"] = self.cache["length"].at[slot.index].set(C)
             self.park_hits += 1
         self.shared_prefix_tokens += C
+        if C % self.page_size and slot.shared:
+            # eagerly CoW-split the partial boundary page: the batched decode
+            # step's masked rows still write (dropped only by *unmapped*
+            # tables), so a shared page this slot will write into must go
+            # private before the next decode/verify step, not lazily at
+            # chunk time
+            self._prepare_write_span(slot, C, 1)
 
     def _map_page(self, slot: Slot, page_idx: int) -> None:
         """Host-side mapping only — the caller pushes the updated row to the
@@ -729,18 +791,20 @@ class DecodeScheduler:
     # -- session parking (cross-request KV retention) ------------------------
 
     def _publish_index(self, row: np.ndarray, history: np.ndarray,
-                       prompt_len: int, hashes=None) -> None:
-        """Publish a finished sequence's full *prompt-span* pages into the
-        prefix index (content-addressed by token chain; the index takes one
-        reference per adopted page).  Pages holding generated tokens are
-        not published: their KV went through the S=1 decode path, which is
-        not bitwise what a re-prefill would compute (see ParkedSession).
-        ``hashes`` reuses the request's cached prompt chain when the
-        admission already computed it."""
-        full = prompt_len // self.page_size
+                       hashes=None) -> None:
+        """Publish a finished sequence's full pages — generated span
+        included — into the prefix index (content-addressed by token chain;
+        the index takes one reference per adopted page).  Resident KV covers
+        ``len(history) - 1`` tokens (the final sampled token was never
+        consumed), and decode-written KV is bitwise prefill KV, so every
+        full page under that span is exactly what a re-prefill of the same
+        tokens would produce.  ``hashes`` reuses the request's cached prompt
+        chain when it already covers the span (the chain property makes the
+        prompt hashes a prefix of the history hashes)."""
+        full = (len(history) - 1) // self.page_size
         if not full:
             return
-        if hashes is None:
+        if hashes is None or len(hashes) < full:
             hashes = kvcache.page_hashes(history[: full * self.page_size],
                                          self.page_size)
         self.prefix_index.publish(hashes[:full],
@@ -759,14 +823,13 @@ class DecodeScheduler:
         row = self._page_rows[slot.index].copy()
         self._reserved -= slot.need - len(slot.pages)
         if self._index_sharing:
-            self._publish_index(row, history, len(prompt), hashes=req.hashes)
+            self._publish_index(row, history, hashes=req.hashes)
         old = self._parked.pop(req.session, None)
         if old is not None:
             self._drop_record(old)          # superseded journal
         self._parked[req.session] = ParkedSession(
             session=req.session, history=history, consumed=consumed,
-            prompt_len=len(prompt), page_row=row,
-            pages=slot.pages + slot.shared, slot=slot.index,
+            page_row=row, pages=slot.pages + slot.shared, slot=slot.index,
             parked_step=self.steps)
         self._page_rows[slot.index, :] = -1
         self.cache = kvcache.set_page_row(
@@ -918,6 +981,13 @@ class DecodeScheduler:
         for idx in list(self._preempted_order):
             slot = self.slots[idx]
             if self._uncommitted() < slot.need:
+                # retention must never starve a restore: index references
+                # and parked journals are reclaimable cache, a preempted
+                # request is real work.  Without this the drain livelocks
+                # once retention holds the whole pool (nothing else calls
+                # the reclaim path when the pending queue is empty).
+                self._reclaim_pool(slot.need)
+            if self._uncommitted() < slot.need:
                 break
             slot.to(SlotState.RESTORING)
             self._reserved += slot.need
@@ -1026,6 +1096,17 @@ class DecodeScheduler:
             slot.n_out = 1
             slot.chunks = None
             self.admitted += 1
+            if self._spec:
+                # one host sync per admission: the draft starts from scratch
+                # on the full canonical stream (prompt + first sampled token)
+                slot.spec_last = int(tok[0])
+                slot.spec_pending = [int(t) for t in
+                                     np.asarray(slot.req.prompt,
+                                                np.int32).reshape(-1)]
+                slot.spec_pending.append(slot.spec_last)
+                slot.draft_len = 0
+                self.draft_cache["length"] = (
+                    self.draft_cache["length"].at[slot.index].set(0))
 
     # -- decode loop ---------------------------------------------------------------
 
@@ -1065,12 +1146,108 @@ class DecodeScheduler:
         out_buf = out_buf.at[b, col].set(toks)
         return new_cache, toks, out_buf, out_pos + active.astype(jnp.int32)
 
+    def _spec_round(self, active: List[int]) -> None:
+        """One draft-and-verify round over the ACTIVE slots: the draft
+        proposes ``spec_k`` tokens per slot, the target scores all of them
+        in one chunked step against the shared paged pool, and each slot
+        emits the accepted prefix plus the target's bonus/correction token
+        (1..spec_k+1 tokens per round, token-for-token what S=1 decode
+        would emit).
+
+        Host/device discipline: one device->host sync per round (the
+        accepted counts + emitted tokens).  Draft catch-up chunks replay the
+        canonical tokens the draft has not consumed — the whole prompt on a
+        fresh admission, 1-2 tokens per round thereafter — and rejected
+        proposals rewind the draft row's length, so the draft cache tracks
+        exactly the canonical stream.
+
+        Rollback on rejection: KV pages need no copy — the verify chunk's
+        over-run positions sit past the rewound length (invalid to every
+        read) and the next round's chunk overwrites them before they can
+        become visible; pages mapped or CoW-split for the span stay with
+        the slot (refcount/free-list state is untouched by a reject).
+        Hybrid recurrent rows DID advance through rejected tokens, so a
+        partial accept restores the pre-verify row snapshot and replays the
+        accepted span through the chunk path — bitwise the same KV and
+        recurrent state, by the chunk-prefix property."""
+        k = self.spec_k
+        spec = [self.slots[i] for i in active]
+        mask = np.zeros((self.n_slots,), bool)
+        mask[active] = True
+        mask_dev = jnp.asarray(mask)
+        # 1) draft catch-up on the canonical stream (B=1 chunks)
+        draft_last = jnp.zeros((self.n_slots,), jnp.int32)
+        for st in spec:
+            lg, self.draft_cache = self._draft_chunk(
+                self.draft_params, self.draft_cache,
+                jnp.asarray(st.spec_pending, jnp.int32)[None], st.index)
+            draft_last = draft_last.at[st.index].set(
+                sampling.greedy(lg[:, -1])[0])
+            st.draft_len += len(st.spec_pending)
+            st.spec_pending = []
+        # 2) k-1 batched draft steps finish the proposal window
+        cols = [draft_last]
+        for _ in range(k - 1):
+            self.draft_cache, draft_last = self._draft_step(
+                self.draft_params, self.draft_cache, draft_last, mask_dev)
+            cols.append(draft_last)
+        drafts = jnp.stack(cols, axis=1)                     # (n_slots, k)
+        # 3) make the verify span writable (alloc-on-write + CoW split,
+        #    same as decode growth but k+1 positions at once) and clamp
+        #    each slot's acceptance so it cannot overrun its max_new budget
+        k_eff = np.zeros((self.n_slots,), np.int32)
+        for st in spec:
+            self._prepare_write_span(st, st.len, k + 1)
+            k_eff[st.index] = min(k, st.req.max_new - st.n_out - 1)
+        verify_tokens = jnp.concatenate(
+            [self.last_tokens[:, None], drafts], axis=1)     # (n_slots, k+1)
+        hybrid = self.model.cfg.family == "hybrid"
+        pre_cache = self.cache if hybrid else None
+        (self.cache, y, a_vec, self.out_buf, self.out_pos,
+         self.last_tokens) = self._verify(
+            self.params, self.cache, verify_tokens, mask_dev,
+            jnp.asarray(k_eff), self.out_buf, self.out_pos, self.last_tokens)
+        y_h, a_h = jax.device_get((y, a_vec))     # the round's one host sync
+        for st in spec:
+            i = st.index
+            a = int(a_h[i])
+            if hybrid and a < k:
+                # recurrent rows consumed all k+1 verify tokens; restore the
+                # pre-verify snapshot and replay the canonical span (the
+                # pending token + the a accepted drafts) through the chunk
+                # path.  KV under the replay is rewritten bitwise-identically
+                # (chunk-prefix property), so pages need no rollback.
+                state = self._gather_state(pre_cache, i)
+                self.cache = self._scatter_state(self.cache, i, state)
+                replay = [st.spec_last] + [int(t) for t in y_h[i, :a]]
+                _, self.cache = self._chunk(
+                    self.params, self.cache,
+                    jnp.asarray(replay, jnp.int32)[None], i)
+            emitted = a + 1
+            st.n_out += emitted
+            st.len += emitted
+            st.spec_last = int(y_h[i, a])
+            adv = min(a, k - 1)       # drafts d1..d_adv proved canonical
+            st.draft_len += adv
+            # canonical tokens the draft has not consumed: y[adv..a]
+            st.spec_pending = [int(t) for t in y_h[i, adv:a + 1]]
+            self.spec_accepted += a
+            self.spec_emitted += emitted
+            self.decode_tokens += emitted
+        # rejected proposals rewind the draft rows to the canonical length
+        idx = jnp.asarray([st.index for st in spec], jnp.int32)
+        vals = jnp.asarray([st.draft_len for st in spec], jnp.int32)
+        self.draft_cache["length"] = self.draft_cache["length"].at[idx].set(vals)
+        self.spec_proposed += k * len(spec)
+        self.spec_rounds += 1
+
     def step(self) -> List[CompletedRequest]:
         """One scheduler tick: at most one prefill chunk (round-robin over
         admitting slots) and one restore chunk (round-robin over restoring
-        slots), then one batched decode step over the active slots; returns
-        the requests that completed this step (their slots are refilled from
-        the pending list before returning)."""
+        slots), then one batched decode step — or, with speculation on, one
+        draft-and-verify round — over the active slots; returns the requests
+        that completed this step (their slots are refilled from the pending
+        list before returning)."""
         self._fill_slots()
         admitting = [s for s in self.slots if s.state is SlotState.ADMITTING]
         if admitting:
@@ -1085,31 +1262,37 @@ class DecodeScheduler:
         active = [s.index for s in self.slots if s.decoding]
         if not active:
             return []
-        if self.kv_mode == "paged" and self._has_kv:
-            # alloc-on-write for decode growth: make the page this step's
-            # token write lands in writable — map it if unmapped (within the
-            # reservation; the final step's dangling write past it is
-            # dropped by the unmapped table), CoW-split it if shared
+        if self._spec:
+            self._spec_round(active)
+        else:
+            if self.kv_mode == "paged" and self._has_kv:
+                # alloc-on-write for decode growth: make the page this step's
+                # token write lands in writable — map it if unmapped (within
+                # the reservation; the final step's dangling write past it is
+                # dropped by the unmapped table), CoW-split it if shared
+                for i in active:
+                    st = self.slots[i]
+                    self._prepare_write_span(st, st.len, 1)
+            mask = np.zeros((self.n_slots,), bool)
+            mask[active] = True
+            self._key, sub = jax.random.split(self._key)
+            self.cache, self.last_tokens, self.out_buf, self.out_pos = \
+                self._decode(
+                    self.params, self.cache, self.last_tokens, self.out_buf,
+                    self.out_pos, jnp.asarray(mask), sub)
+            self.decode_tokens += len(active)
             for i in active:
                 st = self.slots[i]
-                self._prepare_write_span(st, st.len, 1)
-        mask = np.zeros((self.n_slots,), bool)
-        mask[active] = True
-        self._key, sub = jax.random.split(self._key)
-        self.cache, self.last_tokens, self.out_buf, self.out_pos = self._decode(
-            self.params, self.cache, self.last_tokens, self.out_buf,
-            self.out_pos, jnp.asarray(mask), sub)
+                st.n_out += 1
+                if self.kv_mode == "paged":
+                    st.len += 1
         self.steps += 1
         self.slot_steps += len(active)
-        self.decode_tokens += len(active)
         if self.kv_mode == "paged" and self._has_kv:
             self.page_step_sum += self.allocator.in_use
         finished: List[CompletedRequest] = []
         for i in active:
             st = self.slots[i]
-            st.n_out += 1
-            if self.kv_mode == "paged":
-                st.len += 1
             if st.n_out >= st.req.max_new:
                 req = st.req
                 st.to(SlotState.DRAINED)
@@ -1128,7 +1311,7 @@ class DecodeScheduler:
                         self._publish_index(
                             self._page_rows[st.index],
                             np.concatenate([prompt, tokens.astype(np.int32)]),
-                            len(prompt), hashes=req.hashes)
+                            hashes=req.hashes)
                     self._release_slot(st)
                 self._active_sessions.discard(req.session)
                 self.completed += 1
@@ -1147,6 +1330,12 @@ class DecodeScheduler:
         self.pending = []
         self._active_sessions.clear()
         self._preempted_order = []
+        # replay determinism: the post-reset schedule must be a pure
+        # function of the submitted work, not of the previous life's
+        # round-robin phase or sampling-key position
+        self._chunk_rr = 0
+        self._restore_rr = 0
+        self._key = jax.random.key(self._seed)
         # allocator.reset() below wipes every reference wholesale, so the
         # index and parked table just forget their entries
         self.prefix_index.clear()
@@ -1161,6 +1350,11 @@ class DecodeScheduler:
             self._page_rows[:] = -1
             for slot in range(self.n_slots):
                 self.cache = kvcache.cache_clear_slot(self.cache, slot)
+        if self._spec:
+            # draft rows replay from scratch at the next admission; zero
+            # lengths so stale ring lanes are invalid until overwritten
+            self.draft_cache["length"] = jnp.zeros_like(
+                self.draft_cache["length"])
 
     # -- invariant audit (the differential harness calls this every step) ----------
 
@@ -1297,6 +1491,25 @@ class DecodeScheduler:
             "index_pages": len(self.prefix_index),
         }
 
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculation gauges: acceptance rate (accepted / proposed drafts)
+        and verify steps per emitted token (1.0 = no speedup; 1/(k+1) =
+        every draft accepted) — the cost lever is that one verify round
+        prices like one decode step but emits up to k+1 tokens."""
+        return {
+            "spec_k": self.spec_k,
+            "spec_rounds": self.spec_rounds,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "spec_acceptance_rate": round(
+                self.spec_accepted / self.spec_proposed, 4)
+                if self.spec_proposed else 0.0,
+            "spec_steps_per_token": round(
+                self.spec_rounds / self.spec_emitted, 4)
+                if self.spec_emitted else 0.0,
+        }
+
     def stats(self) -> Dict[str, float]:
         out = {
             "steps": self.steps,
@@ -1314,4 +1527,6 @@ class DecodeScheduler:
             out.update(self.offload_stats())
         if self.prefix_sharing or self.park_sessions:
             out.update(self.sharing_stats())
+        if self._spec:
+            out.update(self.spec_stats())
         return out

@@ -258,12 +258,11 @@ def test_release_keeps_shared_page_and_cow_splits_mid_decode():
 def test_multiturn_park_parity(arch):
     """Turn 2/3 extend the session history: the parked journal serves the
     resident prefix, only the tail prefills, and the output is exactly the
-    from-scratch solo run.  Attention families reuse the previous *prompt*
-    span (prefill-path KV — bitwise what sharing-off computes) and
-    re-prefill the generated tokens; hybrid keeps its recurrent rows and
-    reuses everything consumed."""
+    from-scratch solo run.  Both families reuse the whole *consumed* span —
+    prompt and generated tokens alike — because decode-written KV is bitwise
+    what a re-prefill would write (the S=1 decode path IS the chunk path at
+    S=1); only the last sampled token, whose KV was never written, re-feeds."""
     cfg, model, params = tiny(arch)
-    attention = cfg.family in ("dense", "moe")
     N = 3
     rng = np.random.default_rng(7)
     sched = DecodeScheduler(model, params, n_slots=2, max_seq=MAX_SEQ,
@@ -283,9 +282,9 @@ def test_multiturn_park_parity(arch):
         prefill_per_turn.append(sched.prefill_tokens - before)
         assert got[f"r{turn}"].reused_tokens == expect_reused
         assert prefill_per_turn[-1] == len(hist) - expect_reused
-        # what the journal serves next turn: the prompt span (attention,
-        # prefill-path only) or everything consumed (hybrid)
-        expect_reused = len(hist) if attention else len(hist) + N - 1
+        # what the journal serves next turn: everything consumed — prompt
+        # plus all but the last generated token (its KV was never written)
+        expect_reused = len(hist) + N - 1
         hist = np.concatenate([hist, got[f"r{turn}"].tokens.astype(np.int32),
                                rng.integers(0, cfg.vocab, 2).astype(np.int32)])
     # turn >= 2 prefills only the tail while the prompt kept growing
@@ -318,14 +317,15 @@ def test_park_offload_restores_from_blob():
     drain(sched, got)
     np.testing.assert_array_equal(got["r1"].tokens, solo(model, params, p2, N))
     assert sched.blob_store.gets == 1
-    assert got["r1"].reused_tokens == len(p1)   # prompt span (prefill-path)
+    assert got["r1"].reused_tokens == len(p1) + N - 1   # full consumed span
 
 
 def test_park_blob_restore_slices_to_reused_span():
-    """A blob journal can hold far more pages than the next request reuses
-    (attention families re-prefill the generated tail): the restore must
-    allocate and inject only the reused span, not the whole blob — the
-    whole-blob version over-allocates past the admission's reservation."""
+    """A blob journal can hold more pages than the next request reuses (a
+    short extension keeps at least one prompt token as the prefill tail):
+    the restore must allocate and inject only the reused span, not the
+    whole blob — the whole-blob version over-allocates past the admission's
+    reservation."""
     cfg, model, params = tiny()
     rng = np.random.default_rng(31)
     p1 = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
@@ -338,7 +338,8 @@ def test_park_blob_restore_slices_to_reused_span():
     sched._offload_parked(rec)
     sched.audit()
     assert len(rec.blob_pidx) == 5           # ceil((8+12-1)/4)
-    # next turn reuses only the 8-token prompt span (2 pages of the blob)
+    # next turn is an 11-token prompt: reuse caps at P-1 = 10 tokens (one
+    # token must remain as the prefill tail), i.e. 3 of the 5 blob pages
     p2 = np.concatenate([p1, got["r0"].tokens[:3].astype(np.int32)])
     sched.submit("s", "r1", p2, 4)
     assert sched.slots[0].state is SlotState.ADMITTING or \
@@ -346,12 +347,12 @@ def test_park_blob_restore_slices_to_reused_span():
     assert sched.blob_store.gets == 1
     drain(sched, got)
     np.testing.assert_array_equal(got["r1"].tokens, solo(model, params, p2, 4))
-    assert got["r1"].reused_tokens == len(p1)
+    assert got["r1"].reused_tokens == len(p2) - 1
 
 
 def test_short_matching_resubmission_keeps_journal():
-    """A prompt that matches the journal but is too short to reuse (hybrid:
-    an exact resubmission of the recorded history) must not be treated as
+    """A prompt that matches the journal but leaves no prefill tail (hybrid:
+    a resubmission of exactly the consumed span) must not be treated as
     divergence — the journal survives and serves the next real extension."""
     cfg, model, params = tiny("recurrentgemma-2b")
     rng = np.random.default_rng(37)
@@ -362,21 +363,50 @@ def test_short_matching_resubmission_keeps_journal():
     sched.submit("s", "r0", p1, 3)
     drain(sched, got)
     hist = np.concatenate([p1, got["r0"].tokens.astype(np.int32)])
-    # consumed = 10; P = 11 < consumed + 2: consistent but too short
-    sched.submit("s", "r1", hist, 3)
+    # journal: history = 11, consumed = 10.  P = 10 == consumed leaves no
+    # tail token to prefill: consistent but too short — reuse nothing, but
+    # do NOT drop the journal
+    sched.submit("s", "r1", hist[:10], 3)
     drain(sched, got)
     np.testing.assert_array_equal(got["r1"].tokens,
-                                  solo(model, params, hist, 3))
+                                  solo(model, params, hist[:10], 3))
     assert sched.park_misses == 0            # NOT a divergence
     assert got["r1"].reused_tokens == 0
-    # a real extension afterwards still park-hits (the superseding journal)
-    hist2 = np.concatenate([hist, got["r1"].tokens.astype(np.int32),
+    # a real extension afterwards still park-hits (the superseding journal:
+    # history = 13, consumed = 12)
+    hist2 = np.concatenate([hist[:10], got["r1"].tokens.astype(np.int32),
                             rng.integers(0, cfg.vocab, 2).astype(np.int32)])
     sched.submit("s", "r2", hist2, 3)
     drain(sched, got)
     np.testing.assert_array_equal(got["r2"].tokens,
                                   solo(model, params, hist2, 3))
     assert sched.park_hits == 1
+    assert got["r2"].reused_tokens == 12     # the full consumed span
+
+
+def test_exact_resubmission_reuses_consumed_span():
+    """The case the consumed-span lift unlocks for the hybrid: resubmitting
+    the full recorded history (P = consumed + 1) now reuses every consumed
+    token and prefills only the last sampled one — previously an exact
+    resubmission was 'too short' because the recurrent rows demanded the
+    whole prompt be re-fed."""
+    cfg, model, params = tiny("recurrentgemma-2b")
+    rng = np.random.default_rng(41)
+    p1 = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    sched = DecodeScheduler(model, params, n_slots=2, max_seq=MAX_SEQ,
+                            page_size=4, park_sessions=True)
+    got = {}
+    sched.submit("s", "r0", p1, 3)
+    drain(sched, got)
+    hist = np.concatenate([p1, got["r0"].tokens.astype(np.int32)])
+    before = sched.prefill_tokens
+    sched.submit("s", "r1", hist, 3)         # P = 11 = consumed + 1
+    drain(sched, got)
+    np.testing.assert_array_equal(got["r1"].tokens,
+                                  solo(model, params, hist, 3))
+    assert sched.park_hits == 1
+    assert got["r1"].reused_tokens == len(hist) - 1
+    assert sched.prefill_tokens - before == 1    # only the sampled token
 
 
 def test_slot_pressure_evicts_parked_then_restores():
@@ -553,7 +583,7 @@ def test_frontend_bills_park_retention():
                             seq_len=20))[0])
     stats = fe.serving_stats()
     assert stats["park_hits"] == 1
-    assert stats["shared_prefix_tokens"] == len(p1)   # prompt span
+    assert stats["shared_prefix_tokens"] == len(p1) + 4 - 1   # consumed span
     assert stats["park_storage_usd"] > 0.0   # blob bytes x sim-time retention
     assert cloud.op_counts.get("obj_read", 0) >= 1   # the restore GET billed
     assert cloud.op_counts.get("obj_write", 0) >= 1  # the offload PUT billed

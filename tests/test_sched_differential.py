@@ -52,6 +52,19 @@ TIER1_SEEDS = ([("minicpm-2b", s) for s in range(15)]
                + [("moonshot-v1-16b-a3b", s) for s in range(5)]
                + [("recurrentgemma-2b", s) for s in range(5)])
 
+# tier-1 speculative matrix: >= 25 sequences, all archetypes, same event
+# soup (forced preempts, parking, prefix sharing) with draft-and-verify on.
+# ``spec`` = (draft arch, draft init seed, k): draft seed 0 is the target's
+# own params (self-draft, high acceptance — exercises the accept fast path);
+# a different seed or arch is a disagreeing draft (low acceptance — hammers
+# the rejection / length-rewind / hybrid-rollback path every round).
+TIER1_SPEC_SEEDS = (
+    [("minicpm-2b", ("minicpm-2b", 0, 3), s) for s in range(8)]
+    + [("minicpm-2b", ("minicpm-2b", 7, 2), s) for s in range(4)]
+    + [("moonshot-v1-16b-a3b", ("moonshot-v1-16b-a3b", 0, 3), s) for s in range(4)]
+    + [("moonshot-v1-16b-a3b", ("minicpm-2b", 7, 2), s) for s in range(2)]
+    + [("recurrentgemma-2b", ("minicpm-2b", 0, 3), s) for s in range(7)])
+
 FAILURE_DIR = Path("artifacts/diff_failures")
 
 _ARCH_CACHE = {}
@@ -86,28 +99,48 @@ class SoloRef:
         return self._memo[key]
 
 
-def _arch(name):
-    if name not in _ARCH_CACHE:
+def _arch(name, spec=None):
+    """Build (or fetch) the scheduler + solo reference for ``name``.
+
+    ``spec=(draft_arch, draft_seed, k)`` turns on draft-and-verify
+    speculative decoding; ``draft_seed == 0`` with ``draft_arch == name``
+    reuses the target's own params (self-draft).  The solo reference is
+    always non-speculative — that IS the parity claim.
+    """
+    key = (name, spec)
+    if key not in _ARCH_CACHE:
         cfg = configs.get(name).reduced()
         model = build_model(cfg)
         params = model.init(jax.random.key(0))
+        kw = {}
+        if spec is not None:
+            draft_arch, draft_seed, k = spec
+            if draft_arch == name and draft_seed == 0:
+                draft_model, draft_params = model, params
+            else:
+                draft_model = build_model(configs.get(draft_arch).reduced())
+                draft_params = draft_model.init(jax.random.key(draft_seed))
+            kw = dict(draft_model=draft_model, draft_params=draft_params,
+                      spec_k=k)
         sched = DecodeScheduler(model, params, n_slots=N_SLOTS,
                                 max_seq=MAX_SEQ, page_size=PAGE_SIZE,
                                 prefill_chunk=PREFILL_CHUNK, offload=True,
-                                prefix_sharing=True, park_sessions=True)
-        _ARCH_CACHE[name] = (cfg, sched, SoloRef(model, params))
-    return _ARCH_CACHE[name]
+                                prefix_sharing=True, park_sessions=True, **kw)
+        _ARCH_CACHE[key] = (cfg, sched, SoloRef(model, params))
+    return _ARCH_CACHE[key]
 
 
-def _run_sequence(arch: str, seed: int, log: Optional[list] = None) -> list:
+def _run_sequence(arch: str, seed: int, log: Optional[list] = None,
+                  spec=None) -> list:
     """One seeded event sequence; appends every event to ``log`` (so a
     caller-owned list survives an assertion failure) and raises on any
     parity or invariant violation."""
-    cfg, sched, ref = _arch(arch)
+    cfg, sched, ref = _arch(arch, spec)
     sched.reset()
     # zlib.crc32, not hash(): str hashing is salted per process, and a
     # failing (arch, seed) must replay bit-identically from the artifact
-    rng = np.random.default_rng(zlib.crc32(arch.encode()) * 100003 + seed)
+    tag = arch if spec is None else f"{arch}+{spec[0]}:{spec[1]}:{spec[2]}"
+    rng = np.random.default_rng(zlib.crc32(tag.encode()) * 100003 + seed)
     sched.park_ttl_steps = int(rng.choice([0, 0, 18]))
     sessions = [f"s{i}" for i in range(int(rng.integers(3, 6)))]
     history = {s: None for s in sessions}     # completed conversation so far
@@ -115,7 +148,7 @@ def _run_sequence(arch: str, seed: int, log: Optional[list] = None) -> list:
     shared_sys = rng.integers(0, cfg.vocab, size=2 * PAGE_SIZE).astype(np.int32)
     log = log if log is not None else []
     log.append({"arch": arch, "seed": seed, "ttl": sched.park_ttl_steps,
-                "sessions": len(sessions)})
+                "sessions": len(sessions), "spec": spec})
     rid = 0
 
     def submit(sess):
@@ -193,19 +226,22 @@ def _run_sequence(arch: str, seed: int, log: Optional[list] = None) -> list:
     return log
 
 
-def _run_and_dump(arch: str, seed: int) -> None:
+def _run_and_dump(arch: str, seed: int, spec=None) -> None:
     log: list = []
     try:
-        _run_sequence(arch, seed, log)
+        _run_sequence(arch, seed, log, spec=spec)
     except Exception as e:
-        # the sequence is a pure function of (arch, seed): the artifact
+        # the sequence is a pure function of (arch, seed, spec): the artifact
         # carries both the replay recipe and the event trace up to the
         # failure, and CI uploads the directory on failure
         FAILURE_DIR.mkdir(parents=True, exist_ok=True)
-        path = FAILURE_DIR / f"seq_{arch}_{seed}.json"
+        tag = "" if spec is None else f"_spec_{spec[0]}_{spec[1]}_{spec[2]}"
+        path = FAILURE_DIR / f"seq_{arch}{tag}_{seed}.json"
         path.write_text(json.dumps(
-            {"arch": arch, "seed": seed, "error": str(e)[:2000],
-             "repro": f"_run_sequence({arch!r}, {seed})", "events": log},
+            {"arch": arch, "seed": seed, "spec": spec,
+             "error": str(e)[:2000],
+             "repro": f"_run_sequence({arch!r}, {seed}, spec={spec!r})",
+             "events": log},
             indent=2))
         raise
 
@@ -214,6 +250,21 @@ def _run_and_dump(arch: str, seed: int) -> None:
                          ids=[f"{a}-{s}" for a, s in TIER1_SEEDS])
 def test_sched_differential(arch, seed):
     _run_and_dump(arch, seed)
+
+
+@pytest.mark.parametrize(
+    "arch,spec,seed", TIER1_SPEC_SEEDS,
+    ids=[f"{a}-draft_{sp[0]}_{sp[1]}_k{sp[2]}-{s}"
+         for a, sp, s in TIER1_SPEC_SEEDS])
+def test_sched_differential_spec(arch, spec, seed):
+    """Same event soup as :func:`test_sched_differential` — multi-turn
+    parking, cross-session shared prefixes, forced preempts, TTL expiry —
+    with draft-and-verify speculative decoding on, asserted token-for-token
+    equal to the *non-speculative* solo reference and audited every step.
+    Self-draft rows pin the accept fast path; disagreeing-draft rows reject
+    nearly every proposal and so hammer the length-rewind (and, for the
+    hybrid, the recurrent-row rollback + replay) machinery."""
+    _run_and_dump(arch, seed, spec=spec)
 
 
 SWEEP_BASE = os.environ.get("SCHED_DIFF_SWEEP")

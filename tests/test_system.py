@@ -43,8 +43,9 @@ def test_dryrun_multipod_subprocess():
 def test_dryrun_matrix_artifact_complete():
     """The committed artifact must cover every (arch x shape x mesh) cell
     with status OK — 33 applicable cells x 2 meshes, plus the paged-kernel
-    decode dispatch axis (every attention-bearing decode cell twice: gather
-    ring and fused pool) — 42 x 2 = 84."""
+    decode dispatch axis (every attention-bearing decode cell again through
+    the fused pool) and the speculative verify-chunk axis (the same cells
+    at S = spec_k + 1) — 51 x 2 = 102."""
     path = ROOT / "artifacts" / "dryrun_matrix.json"
     if not path.exists():
         pytest.skip("matrix artifact not built yet (scripts/run_matrices.sh)")
@@ -55,15 +56,16 @@ def test_dryrun_matrix_artifact_complete():
     base = sum(len(configs.get(a).shapes) for a in configs.list_archs())
     # mirror launch/dryrun.py::paged_kernel_applicable without importing the
     # module (its XLA_FLAGS device-count spoof must not leak into this
-    # process)
+    # process); spec cells share the paged applicability rule
     paged = sum(1 for a in configs.list_archs()
                 for s in configs.get(a).shapes
                 if SHAPES_BY_NAME[s].kind == "decode"
                 and configs.get(a).family in ("dense", "moe", "hybrid"))
-    expected = (base + paged) * 2
+    expected = (base + 2 * paged) * 2
     ok = [r for r in rows if r.get("status") == "OK"]
-    assert len(rows) == expected == 84
+    assert len(rows) == expected == 102
     assert sum(1 for r in rows if r.get("kernel") == "paged") == paged * 2 == 18
+    assert sum(1 for r in rows if r.get("kernel") == "spec") == paged * 2 == 18
     assert len(ok) == len(rows), [
         (r["arch"], r["shape"], r.get("error")) for r in rows if r not in ok]
 
