@@ -4,9 +4,10 @@
 # memory / flops / wire-bytes records land in artifacts/dryrun_matrix.json
 # (consumed by tests/test_system.py::test_dryrun_matrix_artifact_complete).
 # Decode cells run on every dispatch path (--kernel both): the classic
-# gathered ring, the fused Pallas paged-attention pool, and the speculative
-# verify chunk (S = spec_k + 1 over the paged pool), so a sharding
-# regression in any layout fails the wire-bytes gate as a named cell.
+# gathered ring, the fused Pallas paged-attention pool, the speculative
+# verify chunk (S = spec_k + 1 over the paged pool), and the shard_map
+# lane-merge pool (shard_map_pool=True), so a sharding regression in any
+# layout fails the wire-bytes gate as a named cell.
 #
 # Usage:  scripts/run_matrices.sh [out.json]
 #

@@ -8,6 +8,15 @@ active, usually far from the spec that introduced it (and the 1x1 smoke
 mesh in CI can mask it entirely when the misspelled axis ends up
 unsharded).  The registry is parsed from ``dist/sharding.py``'s AST, so
 the pass follows the source of truth.
+
+``jax.shard_map`` call sites get the same axis-name check on their
+``in_specs``/``out_specs`` (bare axis strings included — those bypass the
+``P(...)`` constructor entirely), plus a replication-check finding: a
+shard_map without an explicit ``check_vma=``/``check_rep=`` keyword is
+flagged.  The paged-gather and stationary-MoE bodies produce per-shard
+partials that are *not* replicated across ``model``; the default check
+rejects them at trace time on some jax pins and silently passes on
+others, so every body must declare its stance (``check_vma=False``).
 """
 
 from __future__ import annotations
@@ -69,6 +78,30 @@ class ShardingRegistryRule(Rule):
                     for s in _literal_strs([arg]):
                         if s.value not in ctx.mesh_axes:
                             out.append(self._finding(module, s, name))
+            elif name == "shard_map":
+                out.extend(self._check_shard_map(module, node, ctx))
+        return out
+
+    def _check_shard_map(self, module: Module, node: ast.Call,
+                         ctx: RepoContext) -> List[Finding]:
+        out: List[Finding] = []
+        kwnames = {kw.arg for kw in node.keywords}
+        for kw in node.keywords:
+            if kw.arg in ("in_specs", "out_specs"):
+                # P(...) literals inside the spec are already covered by the
+                # PartitionSpec branch (the nested Call is its own AST node);
+                # only bare axis strings outside any call are new here
+                for s in _shallow_strs(kw.value):
+                    if s.value not in ctx.mesh_axes:
+                        out.append(self._finding(
+                            module, s, f"shard_map {kw.arg}"))
+        if not kwnames & {"check_vma", "check_rep"}:
+            out.append(Finding(
+                RULE_ID, module.rel, node.lineno, node.col_offset,
+                "shard_map call without an explicit check_vma/check_rep "
+                "keyword — per-shard partial bodies (paged gather, "
+                "stationary MoE) must declare replication checking "
+                "(check_vma=False)"))
         return out
 
     def _axis_args(self, call: ast.Call, ctor: str) -> List[ast.AST]:
@@ -96,6 +129,23 @@ def _literal_strs(nodes: List[ast.AST]) -> List[ast.Constant]:
         for n in ast.walk(root):
             if isinstance(n, ast.Constant) and isinstance(n.value, str):
                 out.append(n)
+    return out
+
+
+def _shallow_strs(root: ast.AST) -> List[ast.Constant]:
+    """Literal strings under ``root`` that are NOT nested inside a Call
+    (nested calls — ``P("model")`` — are independently visited by the
+    outer walk, so descending would double-report)."""
+    out: List[ast.Constant] = []
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Call):
+            continue
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.append(n)
+        else:
+            stack.extend(ast.iter_child_nodes(n))
     return out
 
 

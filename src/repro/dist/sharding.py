@@ -349,11 +349,13 @@ def offload_stage_shardings(stage_abs: PyTree, mesh) -> PyTree:
     page_size, H, D)`` in flight between the shared pool and host memory
     (``kvcache.gather_pages`` / ``scatter_pages``).  Unlike the resident
     pool, the chunk is about to cross the device boundary, so the only
-    useful partitioning is the one that matches the pool's head sharding —
-    each shard DMAs its own heads and no reshuffle happens before the
-    transfer.  Heads go on ``model`` when they divide; everything else
-    (including the gathered-page dim — chunks are a handful of pages, far
-    too small to amortize a collective) stays replicated.
+    useful partitioning is the one that matches the pool's own sharding —
+    each shard DMAs its own pool slice and no reshuffle happens before the
+    transfer.  That means the *same* fallback order as
+    :func:`cache_shardings`' pool rule: within-page lane dim on ``model``
+    first, then heads; everything else (including the gathered-page dim —
+    chunks are a handful of pages, far too small to amortize a collective)
+    stays replicated.
     """
     rules = MeshRules.for_mesh(mesh)
 
@@ -363,9 +365,11 @@ def offload_stage_shardings(stage_abs: PyTree, mesh) -> PyTree:
         nd = len(shape)
         entries: list = [None] * nd
         if keys and keys[-1] in _CACHE_POOL_KEYS and nd >= 4:
-            h = nd - 2                      # (..., n, ps, H, D) head dim
-            if shape[h] % _axes_size(rules.model, mesh) == 0:
-                entries[h] = rules.model
+            msize = _axes_size(rules.model, mesh)
+            for dim in (nd - 3, nd - 2):    # (..., n, ps, H, D): lane, heads
+                if shape[dim] % msize == 0:
+                    entries[dim] = rules.model
+                    break
         return NamedSharding(mesh, P(*entries))
 
     return jax.tree_util.tree_map_with_path(assign, stage_abs)
@@ -387,10 +391,12 @@ class ShardingPolicy:
     batch_shardable: bool = True
     attn_mode: str = "head"              # "head" | "seq"
     decode_stationary: bool = False      # stationary-weights MoE decode
+    shard_map_pool: bool = False         # shard_map the fused paged gather
 
     @classmethod
     def default(cls, mesh, *, batch_shardable: bool = True,
                 attn_mode: str = "head", decode_stationary: bool = False,
+                shard_map_pool: bool = False,
                 overrides: Optional[Dict[str, P]] = None) -> "ShardingPolicy":
         """The standard rule table.
 
@@ -430,7 +436,8 @@ class ShardingPolicy:
             specs.update(overrides)
         return cls(mesh=mesh, specs=specs, rules=rules,
                    batch_shardable=batch_shardable, attn_mode=attn_mode,
-                   decode_stationary=decode_stationary)
+                   decode_stationary=decode_stationary,
+                   shard_map_pool=shard_map_pool)
 
 
 _ACTIVE_POLICY: ContextVar[Optional[ShardingPolicy]] = ContextVar(
@@ -469,3 +476,27 @@ def constrain(x, rule_name: str):
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(policy.mesh, fitted))
+
+
+def constrain_tree(tree: PyTree, specs: Optional[PyTree], mesh=None):
+    """Constrain every array leaf of ``tree`` to the matching leaf of a
+    PartitionSpec pytree (e.g. the scheduler's ``cache_specs``).
+
+    Identity when ``specs`` is None or no mesh is resolvable; leaves whose
+    spec is the empty/replicated ``P()`` pass through untouched so the
+    compiler keeps its freedom where the registry expressed no opinion.
+    """
+    if specs is None:
+        return tree
+    if mesh is None:
+        policy = current_policy()
+        mesh = policy.mesh if policy is not None else None
+    if mesh is None:
+        return tree
+
+    def one(leaf, spec):
+        if spec is None or all(e is None for e in spec):
+            return leaf
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(one, tree, specs)

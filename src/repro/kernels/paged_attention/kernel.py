@@ -51,9 +51,9 @@ from ..runtime import resolve_interpret
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(len_ref, qpos_ref, pt_ref, q_ref, k_ref, v_ref,
-                       acc_out, m_out, l_out, acc_ref, m_ref, l_ref, *,
-                       page_size: int, n_blocks: int, scale: float,
+def _paged_attn_kernel(len_ref, qpos_ref, pt_ref, base_ref, q_ref, k_ref,
+                       v_ref, acc_out, m_out, l_out, acc_ref, m_ref, l_ref, *,
+                       pos_stride: int, n_blocks: int, scale: float,
                        window: Optional[int]):
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -69,7 +69,8 @@ def _paged_attn_kernel(len_ref, qpos_ref, pt_ref, q_ref, k_ref, v_ref,
     v = v_ref[0, :, 0, :].astype(jnp.float32)                # (ps, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, ps)
 
-    t_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    t_pos = (j * pos_stride + base_ref[0]
+             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
     mask = (t_pos < len_ref[b]) & (pt_ref[b, j] >= 0)
     if window is not None:
         mask &= t_pos > qpos_ref[b] - window
@@ -98,6 +99,8 @@ def _paged_attn_kernel(len_ref, qpos_ref, pt_ref, q_ref, k_ref, v_ref,
 def paged_attention_kernel(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
                            page_table: jnp.ndarray, lengths: jnp.ndarray,
                            q_pos: jnp.ndarray, *,
+                           lane_base: Optional[jnp.ndarray] = None,
+                           pos_stride: Optional[int] = None,
                            window: Optional[int] = None,
                            interpret: Optional[bool] = None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -108,29 +111,43 @@ def paged_attention_kernel(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
     accumulator, m/l ``(B, Hkv, G)`` running max / normalizer.  Rows with no
     attendable lane come out as ``(0, NEG_INF, 0)``; ops.py owns both the
     normalization and the new-token append.
+
+    ``lane_base``/``pos_stride`` exist for the shard_map lane decomposition
+    (ops.py): a pool lane-sharded on ``model`` hands each shard a
+    ``(n_pages, ps_local, Hkv, D)`` slice holding contiguous lanes
+    ``[lane_base, lane_base + ps_local)`` of every *global* page of size
+    ``pos_stride``, so lane ``t`` of block ``j`` sits at global position
+    ``j * pos_stride + lane_base + t``.  ``lane_base`` is a traced ``(1,)``
+    int32 (a fourth scalar-prefetch operand — it depends on
+    ``axis_index``); ``pos_stride`` is static.  The defaults (0, local page
+    size) reproduce the unsharded positions bitwise.
     """
     B, Hkv, G, D = q.shape
     page_size = kp.shape[1]
     max_pages = page_table.shape[1]
     grid = (B, Hkv, max_pages)
+    if pos_stride is None:
+        pos_stride = page_size
+    if lane_base is None:
+        lane_base = jnp.zeros((1,), jnp.int32)
 
     kernel = functools.partial(
-        _paged_attn_kernel, page_size=page_size, n_blocks=max_pages,
+        _paged_attn_kernel, pos_stride=pos_stride, n_blocks=max_pages,
         scale=1.0 / math.sqrt(D), window=window)
 
-    def q_map(b, h, j, lens, qp, pt):
+    def q_map(b, h, j, lens, qp, pt, base):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, j, lens, qp, pt):
+    def kv_map(b, h, j, lens, qp, pt, base):
         # unmapped blocks clamp to page 0: a benign (masked) fetch, and on
         # TPU a revisited block index skips the DMA entirely
         return (jnp.maximum(pt[b, j], 0), 0, h, 0)
 
-    def o_map(b, h, j, lens, qp, pt):
+    def o_map(b, h, j, lens, qp, pt, base):
         return (b, h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, G, D), q_map),
@@ -158,4 +175,5 @@ def paged_attention_kernel(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
         ],
         interpret=resolve_interpret(interpret),
     )(jnp.asarray(lengths, jnp.int32), jnp.asarray(q_pos, jnp.int32),
-      jnp.asarray(page_table, jnp.int32), q, kp, vp)
+      jnp.asarray(page_table, jnp.int32), jnp.asarray(lane_base, jnp.int32),
+      q, kp, vp)

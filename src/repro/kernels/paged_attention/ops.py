@@ -20,6 +20,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from .kernel import paged_attention_kernel
 
@@ -70,3 +71,137 @@ def paged_attention(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
         l = l * alpha + beta
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _splice_new(qg, acc, m, l, k_new, v_new, pool_dtype, D):
+    """Fold the just-projected token into the streamed softmax state (fp32),
+    identical math to the append branch of :func:`paged_attention`."""
+    B, Hkv = qg.shape[0], qg.shape[1]
+    kn = k_new.astype(pool_dtype).reshape(B, 1, Hkv, D)[:, 0]
+    vn = v_new.astype(pool_dtype).reshape(B, 1, Hkv, D)[:, 0]
+    s_new = jnp.einsum("bhgd,bhd->bhg", qg.astype(jnp.float32),
+                       kn.astype(jnp.float32)) / math.sqrt(D)
+    m_tot = jnp.maximum(m, s_new)
+    alpha = jnp.exp(m - m_tot)
+    beta = jnp.exp(s_new - m_tot)
+    acc = acc * alpha[..., None] + beta[..., None] * vn[:, :, None, :].astype(jnp.float32)
+    l = l * alpha + beta
+    return acc, l
+
+
+def sharded_paged_attention(q: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
+                            page_table: jnp.ndarray, lengths: jnp.ndarray, *,
+                            policy,
+                            q_pos: Optional[jnp.ndarray] = None,
+                            k_new: Optional[jnp.ndarray] = None,
+                            v_new: Optional[jnp.ndarray] = None,
+                            window: Optional[int] = None,
+                            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """:func:`paged_attention` decomposed per mesh shard under
+    ``jax.shard_map`` so the fused kernel reads only the *local* slice of
+    the lane-sharded pool — the GSPMD partitioner cannot see through the
+    ``pallas_call``'s table-indirect ``index_map``, so left to itself it
+    all-gathers the whole pool every step (the 65–73 GB/device wire numbers
+    the cache-sharding rule documents).
+
+    Two decompositions, chosen to match ``cache_shardings``' pool rule so
+    the resident pool is never re-laid-out at the boundary:
+
+    * **lane** (``page_size % |model| == 0`` — the pool rule's first
+      choice): each shard runs the kernel over its contiguous
+      ``ps_local``-lane slice of every page (global positions via
+      ``lane_base``/``pos_stride``), producing a partial online-softmax
+      state ``(acc, m, l)``; the states merge with the standard fp32
+      running-max combine (``pmax``/``psum`` over ``model``) and the
+      new-token logit is spliced in *after* the merge, replicated.  Not
+      bitwise the single-shard kernel (summation order), same fp32
+      contract.
+    * **head** (kv heads divide ``model``): each shard owns whole kv-head
+      groups of q and the matching pool slice; kernel, splice and
+      normalization are fully shard-local — bitwise the unsharded kernel.
+
+    Anything else falls back to the plain (replicated-pool) call.  The slot
+    batch additionally shards over dp when it divides.  ``policy`` is a
+    :class:`repro.dist.sharding.ShardingPolicy` carrying the concrete mesh.
+    """
+    mesh = policy.mesh
+    rules = policy.rules
+    mdl = rules.model
+    B, S, H, D = q.shape
+    Hkv = kp.shape[2]
+    G = H // Hkv
+    ps = kp.shape[1]
+    msize = mesh.shape[mdl] if mdl is not None else 1
+    if msize <= 1:
+        return paged_attention(q, kp, vp, page_table, lengths, q_pos=q_pos,
+                               k_new=k_new, v_new=v_new, window=window,
+                               interpret=interpret)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    q_pos = lengths if q_pos is None else jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 0:
+        q_pos = jnp.broadcast_to(q_pos, (B,))
+
+    dp_size = rules.dp_size(mesh)
+    dp = (tuple(rules.dp)
+          if (policy.batch_shardable and rules.dp and B % dp_size == 0)
+          else None)
+    has_new = k_new is not None
+
+    if ps % msize == 0:          # lane decomposition (pool rule's 1st pick)
+        def lane_body(lengths, q_pos, pt, q, kp_s, vp_s, *new):
+            base = (jax.lax.axis_index(mdl) * (ps // msize)
+                    ).astype(jnp.int32).reshape(1)
+            Bl = q.shape[0]
+            qg = q.reshape(Bl, Hkv, G, D)
+            acc, m, l = paged_attention_kernel(
+                qg, kp_s, vp_s, pt, lengths, q_pos, lane_base=base,
+                pos_stride=ps, window=window, interpret=interpret)
+            # fp32 running-max merge of the per-shard softmax states; empty
+            # shards contribute (0, NEG_INF, 0) and vanish via alpha = 0
+            m_tot = jax.lax.pmax(m, mdl)
+            alpha = jnp.exp(m - m_tot)
+            l = jax.lax.psum(l * alpha, mdl)
+            acc = jax.lax.psum(acc * alpha[..., None], mdl)
+            if new:
+                acc, l = _splice_new(qg, acc, m_tot, l, new[0], new[1],
+                                     kp_s.dtype, D)
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return out.reshape(Bl, 1, H, D).astype(q.dtype)
+
+        body = lane_body
+        pool_spec = P(None, mdl, None, None)
+        q_spec = P(dp, None, None, None)
+        new_spec = P(dp, None, None, None)
+        out_spec = P(dp, None, None, None)
+    elif Hkv % msize == 0:       # head decomposition: fully shard-local
+        def head_body(lengths, q_pos, pt, q, kp_s, vp_s, *new):
+            Bl, Hl = q.shape[0], q.shape[2]
+            qg = q.reshape(Bl, Hl // G, G, D)
+            acc, m, l = paged_attention_kernel(
+                qg, kp_s, vp_s, pt, lengths, q_pos, window=window,
+                interpret=interpret)
+            if new:
+                acc, l = _splice_new(qg, acc, m, l, new[0], new[1],
+                                     kp_s.dtype, D)
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return out.reshape(Bl, 1, Hl, D).astype(q.dtype)
+
+        body = head_body
+        pool_spec = P(None, None, mdl, None)
+        q_spec = P(dp, None, mdl, None)
+        new_spec = P(dp, None, mdl, None)
+        out_spec = P(dp, None, mdl, None)
+    else:
+        return paged_attention(q, kp, vp, page_table, lengths, q_pos=q_pos,
+                               k_new=k_new, v_new=v_new, window=window,
+                               interpret=interpret)
+
+    args = [lengths, q_pos, jnp.asarray(page_table, jnp.int32), q, kp, vp]
+    in_specs = [P(dp), P(dp), P(dp, None), q_spec, pool_spec, pool_spec]
+    if has_new:
+        args += [k_new, v_new]
+        in_specs += [new_spec, new_spec]
+    return jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=out_spec, check_vma=False)(*args)

@@ -79,6 +79,14 @@ DRYRUN_PAGE_SIZE = 16
 # as the paged cells: the verify chunk only exists where the pool does.
 DRYRUN_SPEC_K = 3
 
+# -- shard_map paged dispatch axis -------------------------------------------
+# `kernel='shardmap'` is the paged cell with `shard_map_pool=True`: the fused
+# gather runs as a per-shard kernel over the lane-sharded pool under
+# `jax.shard_map` (log-sum-exp lane merge) instead of letting GSPMD place
+# the gather.  The wire-bytes gate pins that the merge costs only the
+# per-shard softmax statistics — a full-pool all-gather sneaking back in
+# shows up as a `...|shardmap` cell regression.
+
 
 def paged_kernel_applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
     """The fused kernel serves attention layers from the paged pool: decode
@@ -117,17 +125,17 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     shape = SHAPES_BY_NAME[shape_name]
     if shape_name not in cfg.shapes:
         raise ValueError(f"{arch} skips {shape_name} (cfg.shapes={cfg.shapes})")
-    if kernel in ("paged", "spec"):
+    if kernel in ("paged", "spec", "shardmap"):
         if not paged_kernel_applicable(cfg, shape):
             raise ValueError(f"{arch} x {shape_name} has no paged-pool "
                              f"decode path (family={cfg.family!r})")
-        if kernel == "paged":
+        if kernel in ("paged", "shardmap"):
             cfg = dataclasses.replace(cfg, attn_backend="paged_kernel")
         # spec keeps gather dispatch: the verify chunk is S = spec_k + 1
         # tokens and the fused kernel is S=1-only
     elif kernel != "gather":
-        raise ValueError(
-            f"kernel must be 'gather', 'paged' or 'spec', got {kernel!r}")
+        raise ValueError(f"kernel must be 'gather', 'paged', 'spec' or "
+                         f"'shardmap', got {kernel!r}")
     mesh = make_production_mesh(multi_pod=multi_pod)
     model = build_model(cfg)
     p_abs = abstract_params(model)
@@ -136,6 +144,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     pkw = dict(policy_kw or {})
     if shape.kind == "decode":
         pkw.setdefault("decode_stationary", True)
+    if kernel == "shardmap":
+        pkw.setdefault("shard_map_pool", True)
     policy = shd.ShardingPolicy.default(
         mesh, batch_shardable=shape.global_batch % _dp_size(mesh) == 0,
         attn_mode=attn_mode, **pkw)
@@ -304,8 +314,9 @@ def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
                compile_cell: bool = True, kernel_mode: str = "gather", **kw):
     """``kernel_mode``: 'gather' is the classic matrix; 'paged' runs only
     the fused paged-kernel decode cells; 'spec' only the speculative
-    verify-chunk decode cells; 'both' appends paged + spec to the classic
-    matrix (the full 102-cell artifact)."""
+    verify-chunk decode cells; 'shardmap' only the shard_map lane-merge
+    cells; 'both' appends paged + spec + shardmap to the classic matrix
+    (the full 120-cell artifact)."""
     results = []
     archs = archs or configs.list_archs()
     for arch in archs:
@@ -314,8 +325,9 @@ def run_matrix(mesh_mode: str = "both", archs=None, shapes=None,
             if shape_name not in cfg.shapes:
                 continue
             kernels = ({"gather": ["gather"], "paged": ["paged"],
-                        "spec": ["spec"],
-                        "both": ["gather", "paged", "spec"]}[kernel_mode])
+                        "spec": ["spec"], "shardmap": ["shardmap"],
+                        "both": ["gather", "paged", "spec", "shardmap"]}
+                       [kernel_mode])
             for kern in kernels:
                 if kern != "gather" and not paged_kernel_applicable(
                         cfg, SHAPES_BY_NAME[shape_name]):
@@ -357,11 +369,13 @@ def main() -> None:
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--kernel", default="gather",
-                    choices=["gather", "paged", "spec", "both"],
+                    choices=["gather", "paged", "spec", "shardmap", "both"],
                     help="decode dispatch axis: 'paged' lowers only the "
                          "fused paged-attention decode cells, 'spec' only "
-                         "the speculative verify-chunk cells, 'both' appends "
-                         "paged + spec to the classic matrix")
+                         "the speculative verify-chunk cells, 'shardmap' "
+                         "only the shard_map lane-merge cells, 'both' "
+                         "appends paged + spec + shardmap to the classic "
+                         "matrix")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-compile", action="store_true")
     ap.add_argument("--out", default=None)

@@ -193,6 +193,28 @@ def spawn_workload(cloud: SimCloud, frontend: ServingFrontend, *, vocab: int,
         cloud.spawn(session_driver(reqs), name=f"client:{sess}")
 
 
+def _parse_mesh(spec: Optional[str]):
+    """``"2x4"`` -> a ``(data, model)`` device mesh; ``None`` passes through.
+
+    The scheduler treats a mesh as the switch into its shard_map execution
+    mode: slots shard over ``data``, heads/lanes over ``model``.  Fails
+    loudly when the host does not expose enough devices — on CPU, spoof
+    them with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    if spec is None:
+        return None
+    try:
+        dp, mp = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DPxMP (e.g. 2x4), got {spec!r}")
+    if dp * mp > jax.device_count():
+        raise SystemExit(
+            f"--mesh {spec} needs {dp * mp} devices, have "
+            f"{jax.device_count()} (CPU: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={dp * mp})")
+    return jax.make_mesh((dp, mp), ("data", "model"))
+
+
 def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 prompt_len: int = 16, sessions: int = 3, batch_size: int = 4,
                 mode: str = "continuous", temperature: float = 0.0,
@@ -203,7 +225,8 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 idle_preempt_steps: int = 0,
                 prefix_sharing: bool = False, park_sessions: bool = False,
                 park_ttl_steps: int = 0, attn_backend: str = "gather",
-                spec_draft: Optional[str] = None, spec_k: int = 0):
+                spec_draft: Optional[str] = None, spec_k: int = 0,
+                mesh: Optional[str] = None):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -219,6 +242,7 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
 
     cloud = SimCloud(seed=seed)
     frontend = build_frontend(cloud, cfg, model, params, mode=mode,
+                              mesh=_parse_mesh(mesh),
                               batch_size=batch_size, max_new=max_new,
                               prompt_len=prompt_len, temperature=temperature,
                               top_k=top_k, kv_mode=kv_mode,
@@ -340,6 +364,12 @@ def main() -> None:
     ap.add_argument("--spec-k", type=int, default=0,
                     help="draft tokens proposed per verify round "
                          "(default 3 when --spec-draft is set)")
+    ap.add_argument("--mesh", default=None, metavar="DPxMP",
+                    help="run the decode scheduler sharded over a device "
+                         "mesh, e.g. 2x4 = slots over 2-way data, "
+                         "heads/KV lanes over 4-way model (CPU: spoof "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
     run_serving(args.arch, args.requests, max_new=args.max_new,
                 sessions=args.sessions, batch_size=args.batch_size,
@@ -353,7 +383,8 @@ def main() -> None:
                 park_sessions=args.park_sessions,
                 park_ttl_steps=args.park_ttl_steps,
                 attn_backend=args.attn_backend,
-                spec_draft=args.spec_draft, spec_k=args.spec_k)
+                spec_draft=args.spec_draft, spec_k=args.spec_k,
+                mesh=args.mesh)
 
 
 if __name__ == "__main__":

@@ -184,7 +184,7 @@ def paged_attn_decode(layer_cache: Dict, q: jnp.ndarray, pos, *,
     token was already written into the pool (hybrid local-attention layers)
     and lane ``pos`` itself is attended instead.  q: (B, 1, H, D).
     """
-    from ..dist.sharding import constrain
+    from ..dist.sharding import constrain, current_policy
     from ..kernels.paged_attention import paged_attention
 
     kp, vp, pt = layer_cache["kp"], layer_cache["vp"], layer_cache["page_table"]
@@ -193,8 +193,18 @@ def paged_attn_decode(layer_cache: Dict, q: jnp.ndarray, pos, *,
     if pos.ndim == 0:
         pos = jnp.broadcast_to(pos, (B,))
     lengths = pos + 1 if include_new else pos
-    out = paged_attention(q, kp, vp, pt, lengths, q_pos=pos, window=window,
-                          k_new=k_new, v_new=v_new)
+    policy = current_policy()
+    if policy is not None and getattr(policy, "shard_map_pool", False):
+        # shard_map decomposition over the lane-sharded pool: GSPMD cannot
+        # partition the table-indirect pallas_call without all-gathering the
+        # pool, so the per-shard kernel + softmax merge runs explicitly
+        from ..kernels.paged_attention.ops import sharded_paged_attention
+        out = sharded_paged_attention(q, kp, vp, pt, lengths, policy=policy,
+                                      q_pos=pos, window=window, k_new=k_new,
+                                      v_new=v_new)
+    else:
+        out = paged_attention(q, kp, vp, pt, lengths, q_pos=pos,
+                              window=window, k_new=k_new, v_new=v_new)
     return constrain(out, "attn_out")
 
 

@@ -3,26 +3,60 @@
 ``make_decode_step`` is what the decode_* / long_* dry-run cells lower: one
 new token per sequence with a cache of ``seq_len`` (per the assignment, these
 cells lower ``serve_step``, not ``train_step``).
+
+Every factory takes optional ``policy`` / ``cache_specs`` keywords for
+mesh-sharded execution (the scheduler's ``mesh=`` mode): ``policy`` is a
+:class:`repro.dist.sharding.ShardingPolicy` installed *inside* the traced
+body — jit executes the Python function once per trace, so the context
+manager is live exactly while the model constrains activations — and
+``cache_specs`` is the cache's PartitionSpec pytree, re-asserted on the
+returned cache so the carried decode state never drifts off its storage
+layout between steps.  Both default to None: the single-device call sites
+are byte-for-byte the old factories.
 """
 
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def make_decode_step(model) -> Callable:
+def _policy_scope(policy):
+    """Context installing ``policy`` for the trace; ambient pass-through when
+    the caller has no policy (None must not *clear* an outer policy here —
+    dry-run traces under an outer ``activation_sharding``)."""
+    if policy is None:
+        return contextlib.nullcontext()
+    from ..dist import sharding as shd
+
+    return shd.activation_sharding(policy)
+
+
+def _constrain_cache(cache, cache_specs):
+    """Pin the returned cache pytree to its storage PartitionSpecs (identity
+    without specs or without an active policy mesh)."""
+    if cache_specs is None:
+        return cache
+    from ..dist import sharding as shd
+
+    return shd.constrain_tree(cache, cache_specs)
+
+
+def make_decode_step(model, *, policy=None, cache_specs=None) -> Callable:
     def serve_step(params, cache, tokens):
-        logits, new_cache = model.decode_step(params, cache, tokens)
-        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        with _policy_scope(policy):
+            logits, new_cache = model.decode_step(params, cache, tokens)
+            next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            new_cache = _constrain_cache(new_cache, cache_specs)
         return next_token, logits, new_cache
 
     return serve_step
 
 
-def make_chunk_step(model) -> Callable:
+def make_chunk_step(model, *, policy=None, cache_specs=None) -> Callable:
     """Prefill one prompt chunk for a *single slot* of a batched paged cache.
 
     The chunk runs as a B=1 forward against the shared page pool: per-slot
@@ -35,14 +69,17 @@ def make_chunk_step(model) -> Callable:
     from ..models import kvcache
 
     def chunk_step(params, cache, tokens, slot):
-        one = kvcache.cache_slot_view(cache, slot)
-        logits, one_new = model.decode_step(params, one, tokens)
-        return logits, kvcache.cache_insert_slot(cache, one_new, slot)
+        with _policy_scope(policy):
+            one = kvcache.cache_slot_view(cache, slot)
+            logits, one_new = model.decode_step(params, one, tokens)
+            new_cache = kvcache.cache_insert_slot(cache, one_new, slot)
+            new_cache = _constrain_cache(new_cache, cache_specs)
+        return logits, new_cache
 
     return chunk_step
 
 
-def make_draft_step(model) -> Callable:
+def make_draft_step(model, *, policy=None, cache_specs=None) -> Callable:
     """Batched S=1 greedy step for the *draft* model of a speculative
     decoder: one proposed token per masked-in slot against the draft's own
     per-slot ring cache.  Inactive rows keep their state and their last
@@ -50,15 +87,54 @@ def make_draft_step(model) -> Callable:
     from ..models import kvcache
 
     def draft_step(params, cache, last_tokens, active):
-        logits, new_cache = model.decode_step(params, cache, last_tokens[:, None])
-        new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        with _policy_scope(policy):
+            logits, new_cache = model.decode_step(params, cache, last_tokens[:, None])
+            new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+            new_cache = _constrain_cache(new_cache, cache_specs)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return new_cache, jnp.where(active, tok, last_tokens)
 
     return draft_step
 
 
-def make_spec_verify_step(model, *, max_seq: int) -> Callable:
+def make_draft_catchup_step(model, *, policy=None, cache_specs=None) -> Callable:
+    """Batched draft catch-up on the canonical token stream: every masked-in
+    slot replays the canonical tokens its draft ring has not consumed — ONE
+    dispatch per verify round instead of one B=1 chunk per slot.
+
+    ``tokens`` (B, W) is back-padded to the round's widest pending span and
+    ``counts`` (B,) holds each row's real span (>= 1 for active rows).  The
+    whole padded chunk runs through ``decode_step``; then each active row's
+    length advances by its *own* count, so the pad positions land past the
+    canonical length.  Pad-position KV is garbage but never observable: the
+    ring path writes every chunk's KV before attending (post-update view),
+    so a later dispatch overwrites a pad lane's position before any query's
+    causal mask could admit it — provided the ring is deep enough that a pad
+    write never wraps onto a live lane (the scheduler sizes the draft ring
+    for the padded worst case).  The returned last token is row ``counts-1``
+    of the greedy argmax — exactly the B=1 chunk's final-position token.
+    """
+    from ..models import kvcache
+
+    def catchup(params, cache, tokens, counts, active):
+        with _policy_scope(policy):
+            logits, new_cache = model.decode_step(params, cache, tokens)
+            # decode_step advanced every row by the padded width W; the
+            # canonical advance is each row's own pending count
+            new_cache["length"] = jnp.where(
+                active, cache["length"] + counts, cache["length"])
+            new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+            new_cache = _constrain_cache(new_cache, cache_specs)
+            y = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, W)
+            last = jnp.take_along_axis(
+                y, jnp.maximum(counts - 1, 0)[:, None], axis=1)[:, 0]
+        return new_cache, last
+
+    return catchup
+
+
+def make_spec_verify_step(model, *, max_seq: int, policy=None,
+                          cache_specs=None) -> Callable:
     """One draft-and-verify round's target half: score ``spec_k + 1`` tokens
     per slot in a single chunked decode step and accept the longest prefix
     of drafts that matches the target's own greedy argmax.
@@ -90,8 +166,10 @@ def make_spec_verify_step(model, *, max_seq: int) -> Callable:
     def verify(params, cache, verify_tokens, active, k_eff, out_buf, out_pos,
                last_tokens):
         B, S = verify_tokens.shape
-        logits, new_cache = model.decode_step(params, cache, verify_tokens)
-        new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+        with _policy_scope(policy):
+            logits, new_cache = model.decode_step(params, cache, verify_tokens)
+            new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+            new_cache = _constrain_cache(new_cache, cache_specs)
         y = jnp.argmax(logits, axis=-1).astype(jnp.int32)          # (B, S)
         match = (verify_tokens[:, 1:] == y[:, :-1]).astype(jnp.int32)
         a = jnp.minimum(jnp.cumprod(match, axis=1).sum(axis=1), k_eff)
@@ -112,7 +190,8 @@ def make_spec_verify_step(model, *, max_seq: int) -> Callable:
     return verify
 
 
-def make_offload_steps() -> tuple:
+def make_offload_steps(*, policy=None, cache_specs=None,
+                       stage_specs=None) -> tuple:
     """Jitted staging steps for storage-backed preemption.
 
     ``extract(cache, page_ids)`` gathers the victim's pool pages (in the
@@ -123,25 +202,49 @@ def make_offload_steps() -> tuple:
     / :func:`scatter_pages`) jitted once and re-traced only per distinct
     chunk length, so a restore step costs one dispatch — same budget as a
     prefill chunk.
+
+    With a concrete-mesh ``policy`` plus the cache/stage PartitionSpec
+    pytrees, both run under ``jax.shard_map``: the page dim of the pool is
+    unsharded, so the per-page take/scatter is local to each lane shard and
+    the staged chunk comes out in :func:`offload_stage_shardings`' layout —
+    no reshuffle of the pool, no gather of anything but the page ids.
     """
     from ..models import kvcache
 
-    extract = jax.jit(kvcache.gather_pages)
-    inject = jax.jit(kvcache.scatter_pages)
+    mesh = getattr(policy, "mesh", None)
+    if mesh is None or cache_specs is None or stage_specs is None:
+        return jax.jit(kvcache.gather_pages), jax.jit(kvcache.scatter_pages)
+    from jax.sharding import PartitionSpec as P
+
+    def extract_body(cache, ids):
+        return kvcache.gather_pages(cache, ids)
+
+    def inject_body(cache, ids, blob):
+        return kvcache.scatter_pages(cache, ids, blob)
+
+    extract = jax.jit(jax.shard_map(
+        extract_body, mesh=mesh, in_specs=(cache_specs, P()),
+        out_specs=stage_specs, check_vma=False))
+    inject = jax.jit(jax.shard_map(
+        inject_body, mesh=mesh, in_specs=(cache_specs, P(), stage_specs),
+        out_specs=cache_specs, check_vma=False))
     return extract, inject
 
 
-def make_prefill(model, seq_len: Optional[int] = None) -> Callable:
+def make_prefill(model, seq_len: Optional[int] = None, *,
+                 policy=None) -> Callable:
     """``seq_len`` sizes the cache for the *total* sequence (prompt + decode
     budget): without it the legacy prompt-sized ring silently evicts the
     oldest prompt tokens once decode wraps it."""
 
     def prefill(params, tokens, *extra):
-        if seq_len is None:
-            logits, cache = model.prefill(params, tokens, *extra)
-        else:
-            logits, cache = model.prefill(params, tokens, *extra, seq_len=seq_len)
-        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        with _policy_scope(policy):
+            if seq_len is None:
+                logits, cache = model.prefill(params, tokens, *extra)
+            else:
+                logits, cache = model.prefill(params, tokens, *extra,
+                                              seq_len=seq_len)
+            next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_token, cache
 
     return prefill

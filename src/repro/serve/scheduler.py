@@ -129,7 +129,7 @@ import numpy as np
 from ..core.storage import PageBlobStore
 from ..models import kvcache
 from . import sampling
-from .engine import make_chunk_step, make_offload_steps
+from .engine import _policy_scope, make_chunk_step, make_offload_steps
 from .lifecycle import Slot, SlotState
 
 CONTINUOUS_FAMILIES = ("dense", "moe", "ssm", "hybrid")
@@ -308,15 +308,11 @@ class DecodeScheduler:
             self.cache = kvcache.paged_cache(
                 model, n_slots, page_size=page_size, n_pages=self.n_pages,
                 max_pages=self.max_pages)
-            self._chunk = jax.jit(make_chunk_step(model))
         else:
             self.cache = kvcache.batched_cache(model, n_slots, max_seq)
-            self._prefill = jax.jit(
-                lambda p, toks: model.prefill(p, toks, seq_len=max_seq))
 
         # -- offload plumbing ------------------------------------------------
         self.blob_store = blob_store if blob_store is not None else PageBlobStore()
-        self._extract, self._inject = make_offload_steps()
         # restore chunking mirrors prefill chunking: a restore step moves
         # about one prefill chunk's worth of tokens (>= 1 page)
         self._restore_chunk_pages = (
@@ -329,12 +325,22 @@ class DecodeScheduler:
         self.offload_pages = 0
         self.restored_pages = 0
 
+        # -- mesh placement + sharded step set -------------------------------
+        # With a *concrete* mesh the whole hot path goes multi-device: state
+        # (params, cache, slot arrays) is device_put through the storage
+        # registry, and every jitted step below binds a ShardingPolicy so
+        # activations constrain to the mesh and the fused paged gather runs
+        # under shard_map against the lane-sharded pool.  An AbstractMesh
+        # still resolves the spec pytrees (lowering / analysis callers) but
+        # binds the single-device steps.
         self.cache_specs = None
         self.stage_specs = None
+        self._mesh = mesh if isinstance(mesh, jax.sharding.Mesh) else None
+        self._policy = None
         if mesh is not None:
-            from ..dist.sharding import cache_shardings, offload_stage_shardings
+            from ..dist import sharding as shd
 
-            shardings = cache_shardings(self.cache, mesh)
+            shardings = shd.cache_shardings(self.cache, mesh)
             self.cache_specs = jax.tree_util.tree_map(
                 lambda s: s.spec, shardings)
             if self.offload:
@@ -342,9 +348,31 @@ class DecodeScheduler:
                     lambda c: kvcache.gather_pages(c, jnp.zeros((1,), jnp.int32)),
                     self.cache)
                 self.stage_specs = jax.tree_util.tree_map(
-                    lambda s: s.spec, offload_stage_shardings(stage, mesh))
-            if isinstance(mesh, jax.sharding.Mesh):   # concrete: place the cache
+                    lambda s: s.spec, shd.offload_stage_shardings(stage, mesh))
+            if self._mesh is not None:   # concrete: place state, build policy
                 self.cache = jax.device_put(self.cache, shardings)
+                self.params = jax.device_put(
+                    self.params, shd.param_shardings(self.params, self._mesh))
+                self._policy = self._build_policy(model, self._mesh)
+
+        # steps bind the policy + spec pytrees only when a concrete mesh is
+        # live — with cache_specs but no policy (AbstractMesh) the constrain
+        # helpers would be dead weight in the trace
+        skw = (dict(policy=self._policy, cache_specs=self.cache_specs)
+               if self._policy is not None else {})
+        if kv_mode == "paged":
+            self._chunk = jax.jit(make_chunk_step(model, **skw))
+        else:
+            ring_policy = self._policy
+
+            def _ring_prefill(p, toks):
+                with _policy_scope(ring_policy):
+                    return model.prefill(p, toks, seq_len=max_seq)
+
+            self._prefill = jax.jit(_ring_prefill)
+        self._extract, self._inject = make_offload_steps(
+            policy=self._policy, cache_specs=self.cache_specs,
+            stage_specs=self.stage_specs)
 
         self._decode = jax.jit(self._step_impl)
 
@@ -392,15 +420,41 @@ class DecodeScheduler:
             self.draft_params = draft_params
             # per-slot ring sized for the deepest proposal the draft reaches
             # (the page table's span can overhang max_seq by a partial page)
+            # PLUS the batched catch-up's back-padding: a round's widest
+            # pending span W pads every row, so a row at canonical length L
+            # writes (garbage, never-read) lanes up to L + W - 1.  The ring
+            # scatter wraps at capacity, so the ring must be deeper than the
+            # padded worst case (L <= span + spec_k, W <= max_seq + 1) or a
+            # pad write would land on a live lane.
+            span = self.max_pages * self.page_size
             self.draft_cache = kvcache.batched_cache(
-                draft_model, n_slots,
-                self.max_pages * self.page_size + self.spec_k)
-            from .engine import make_draft_step, make_spec_verify_step
+                draft_model, n_slots, 2 * span + self.spec_k + 2)
+            from .engine import (make_draft_catchup_step, make_draft_step,
+                                 make_spec_verify_step)
 
-            self._draft_chunk = jax.jit(make_chunk_step(draft_model))
-            self._draft_step = jax.jit(make_draft_step(draft_model))
+            self._draft_policy = None
+            self._draft_cache_specs = None
+            if self._mesh is not None:
+                from ..dist import sharding as shd
+
+                self._draft_policy = self._build_policy(draft_model,
+                                                        self._mesh)
+                d_sh = shd.cache_shardings(self.draft_cache, self._mesh)
+                self._draft_cache_specs = jax.tree_util.tree_map(
+                    lambda s: s.spec, d_sh)
+                self.draft_cache = jax.device_put(self.draft_cache, d_sh)
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    shd.param_shardings(self.draft_params, self._mesh))
+            dkw = (dict(policy=self._draft_policy,
+                        cache_specs=self._draft_cache_specs)
+                   if self._draft_policy is not None else {})
+            self._draft_catchup = jax.jit(
+                make_draft_catchup_step(draft_model, **dkw))
+            self._draft_step = jax.jit(make_draft_step(draft_model, **dkw))
             self._verify = jax.jit(make_spec_verify_step(model,
-                                                         max_seq=max_seq))
+                                                         max_seq=max_seq,
+                                                         **skw))
         self.spec_rounds = 0
         self.spec_proposed = 0          # draft tokens offered to the verifier
         self.spec_accepted = 0          # draft tokens accepted
@@ -413,6 +467,16 @@ class DecodeScheduler:
         # decode step is a single async dispatch with no host sync
         self.out_buf = jnp.zeros((n_slots, max_seq), jnp.int32)
         self.out_pos = jnp.zeros((n_slots,), jnp.int32)
+        if self._mesh is not None:
+            # slot-batched state follows the cache's slot axis onto dp
+            from ..dist.sharding import batch_shardings
+
+            state = {"last": self.last_tokens, "buf": self.out_buf,
+                     "pos": self.out_pos}
+            state = jax.device_put(state, batch_shardings(state, self._mesh))
+            self.last_tokens = state["last"]
+            self.out_buf = state["buf"]
+            self.out_pos = state["pos"]
         self.pending: List[_Request] = []
         self._active_sessions: set = set()
         self._chunk_rr = 0            # round-robin over admitting slots
@@ -426,6 +490,44 @@ class DecodeScheduler:
         self.decode_tokens = 0
         self.admitted = 0
         self.completed = 0
+
+    # -- mesh mode -----------------------------------------------------------------
+
+    def _build_policy(self, model, mesh):
+        """ShardingPolicy for one model on the live mesh: slots on dp when
+        they divide, heads on model when the kv-head count divides (else the
+        seq fallback), and — for the fused paged backend — the shard_map
+        pool decomposition switched on so :func:`paged_attn_decode`
+        dispatches the per-shard kernel instead of letting GSPMD all-gather
+        the lane-sharded pool."""
+        from ..dist import sharding as shd
+
+        rules = shd.MeshRules.for_mesh(mesh)
+        msize = rules.model_size(mesh)
+        cfg = model.cfg
+        n_kv = getattr(cfg, "n_kv_heads", 0) or getattr(cfg, "n_heads", 1)
+        return shd.ShardingPolicy.default(
+            mesh,
+            batch_shardable=bool(rules.dp)
+            and self.n_slots % rules.dp_size(mesh) == 0,
+            attn_mode="head" if n_kv % msize == 0 else "seq",
+            decode_stationary=True,
+            shard_map_pool=self.attn_backend == "paged_kernel")
+
+    def _stage_put(self, blob):
+        """Place a staging blob (restore chunk / parked-session blob) on the
+        mesh per ``offload_stage_shardings`` *before* injecting, so the
+        sharded scatter's operand already sits in the pool's lane layout —
+        the host->device transfer is the reshard, not an extra collective
+        inside the step."""
+        if self._mesh is None or self.stage_specs is None:
+            return blob
+        from jax.sharding import NamedSharding
+
+        return jax.tree_util.tree_map(
+            lambda leaf, spec: jax.device_put(
+                leaf, NamedSharding(self._mesh, spec)),
+            blob, self.stage_specs)
 
     # -- admission ----------------------------------------------------------------
 
@@ -748,7 +850,8 @@ class DecodeScheduler:
             if npg < len(rec.blob_pidx):
                 blob = kvcache.slice_page_blob(blob, 0, npg)
             self.cache = self._inject(self.cache,
-                                      jnp.asarray(pids, jnp.int32), blob)
+                                      jnp.asarray(pids, jnp.int32),
+                                      self._stage_put(blob))
             self.cache = kvcache.set_page_row(
                 self.cache, slot.index, self._page_rows[slot.index])
             self.cache = self._scatter_state(self.cache, slot.index, rec.state)
@@ -1011,7 +1114,7 @@ class DecodeScheduler:
             phys.append(pid)
         piece = kvcache.slice_page_blob(slot.blob, slot.restore_i, hi)
         self.cache = self._inject(self.cache, jnp.asarray(phys, jnp.int32),
-                                  piece)
+                                  self._stage_put(piece))
         self.cache = kvcache.set_page_row(
             self.cache, slot.index, self._page_rows[slot.index])
         self.restored_pages += hi - slot.restore_i
@@ -1136,14 +1239,20 @@ class DecodeScheduler:
         length and evolving its recurrent state, which corrupts the pool
         pages (and the admission-in-progress) that position now belongs to.
         """
-        logits, new_cache = self.model.decode_step(params, cache, last_tokens[:, None])
-        new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
-        toks = self._sample_pure(logits[:, -1], key)
-        toks = jnp.where(active, toks, last_tokens)
-        b = jnp.arange(self.n_slots, dtype=jnp.int32)
-        # inactive rows scatter out of bounds -> dropped
-        col = jnp.where(active, out_pos % self.max_seq, self.max_seq)
-        out_buf = out_buf.at[b, col].set(toks)
+        from ..dist import sharding as shd
+
+        with _policy_scope(self._policy):
+            logits, new_cache = self.model.decode_step(params, cache,
+                                                       last_tokens[:, None])
+            new_cache = kvcache.mask_slot_rows(new_cache, cache, active)
+            new_cache = shd.constrain_tree(new_cache, self.cache_specs,
+                                           getattr(self._policy, "mesh", None))
+            toks = self._sample_pure(logits[:, -1], key)
+            toks = jnp.where(active, toks, last_tokens)
+            b = jnp.arange(self.n_slots, dtype=jnp.int32)
+            # inactive rows scatter out of bounds -> dropped
+            col = jnp.where(active, out_pos % self.max_seq, self.max_seq)
+            out_buf = out_buf.at[b, col].set(toks)
         return new_cache, toks, out_buf, out_pos + active.astype(jnp.int32)
 
     def _spec_round(self, active: List[int]) -> None:
@@ -1175,14 +1284,22 @@ class DecodeScheduler:
         mask = np.zeros((self.n_slots,), bool)
         mask[active] = True
         mask_dev = jnp.asarray(mask)
-        # 1) draft catch-up on the canonical stream (B=1 chunks)
-        draft_last = jnp.zeros((self.n_slots,), jnp.int32)
+        # 1) draft catch-up on the canonical stream: ONE batched masked
+        #    dispatch over every slot's pending span (back-padded to the
+        #    round's widest; each row advances by its own count).  Replaces
+        #    the per-slot B=1 chunks — a round's catch-up no longer costs
+        #    one dispatch per active slot.
+        W = max((len(st.spec_pending) for st in spec), default=1)
+        tok_rows = np.zeros((self.n_slots, W), np.int32)
+        cnt_rows = np.ones((self.n_slots,), np.int32)
         for st in spec:
-            lg, self.draft_cache = self._draft_chunk(
-                self.draft_params, self.draft_cache,
-                jnp.asarray(st.spec_pending, jnp.int32)[None], st.index)
-            draft_last = draft_last.at[st.index].set(
-                sampling.greedy(lg[:, -1])[0])
+            n = len(st.spec_pending)
+            tok_rows[st.index, :n] = st.spec_pending
+            cnt_rows[st.index] = n
+        self.draft_cache, draft_last = self._draft_catchup(
+            self.draft_params, self.draft_cache, jnp.asarray(tok_rows),
+            jnp.asarray(cnt_rows), mask_dev)
+        for st in spec:
             st.draft_len += len(st.spec_pending)
             st.spec_pending = []
         # 2) k-1 batched draft steps finish the proposal window

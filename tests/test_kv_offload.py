@@ -395,20 +395,25 @@ def test_offload_stage_shardings_resolve():
     sched = DecodeScheduler(model, params, n_slots=16, max_seq=32,
                             page_size=16, mesh=mesh, offload=True)
     specs = sched.stage_specs
-    # the reduced config's 4 kv heads don't divide model=16: the staging
-    # chunk stays fully replicated — never sharded on the page dim
+    # the chunk mirrors the pool's lane-first rule: page_size=16 divides
+    # model=16, so the within-page lane dim rides the model axis and nothing
+    # else does (page dim replicated even though it would divide)
     assert specs is not None and "kp" in specs
-    assert all(e is None for e in specs["kp"])
-    # on a mesh the heads do divide, they ride the model axis (and nothing
-    # else — page dim replicated even though it would divide)
+    assert specs["kp"][-3] == "model"
+    assert all(e is None for i, e in enumerate(specs["kp"]) if i != len(specs["kp"]) - 3)
+    # when the lane doesn't divide, heads are the fallback — exactly the
+    # pool's own fallback order, so scatter/gather stay shard-local
     mesh2 = AbstractMesh((2, 2), ("data", "model"))
-    stage = jax.eval_shape(
-        lambda c: kvcache.gather_pages(c, jnp.zeros((2,), jnp.int32)),
-        sched.cache)
+    stage2 = {"kp": jax.ShapeDtypeStruct((3, 5, 4, 8), jnp.bfloat16)}
     specs2 = jax.tree_util.tree_map(
-        lambda s: s.spec, offload_stage_shardings(stage, mesh2))
+        lambda s: s.spec, offload_stage_shardings(stage2, mesh2))
     assert specs2["kp"][-2] == "model"
-    assert all(e is None for e in specs2["kp"][:-2])
+    assert all(e is None for i, e in enumerate(specs2["kp"]) if i != 2)
+    # neither divides -> fully replicated (never the page dim)
+    stage3 = {"kp": jax.ShapeDtypeStruct((4, 5, 3, 8), jnp.bfloat16)}
+    specs3 = jax.tree_util.tree_map(
+        lambda s: s.spec, offload_stage_shardings(stage3, mesh2))
+    assert all(e is None for e in specs3["kp"])
 
 
 def test_pool_sizing_validated_at_startup():

@@ -358,6 +358,51 @@ def test_registry_matches_runtime():
     assert RepoContext().mesh_axes == set(MESH_AXES)
 
 
+BAD_SHARD_MAP = """
+import jax
+from jax.sharding import PartitionSpec as P
+
+def sharded_gather(body, mesh):
+    # bare axis string bypassing P(...), plus a typo'd axis inside P
+    return jax.shard_map(body, mesh=mesh,
+                         in_specs=("modle", P(None, "mdoel")),
+                         out_specs=P("data"))
+"""
+
+GOOD_SHARD_MAP = """
+import jax
+from jax.sharding import PartitionSpec as P
+
+def sharded_gather(body, mesh):
+    return jax.shard_map(body, mesh=mesh,
+                         in_specs=(P(None, "model"), P()),
+                         out_specs=P("data"), check_vma=False)
+
+def sharded_gather_legacy(body, mesh):
+    return jax.shard_map(body, mesh=mesh, in_specs=(P(),),
+                         out_specs=P(), check_rep=False)
+"""
+
+
+def test_shard_map_axis_names_and_missing_check(tmp_path):
+    report = run(tmp_path, BAD_SHARD_MAP)
+    assert all(r == "sharding-registry" for r in rule_ids(report))
+    axis_findings = [f for f in report.findings if "axis name" in f.message]
+    flagged = {f.message.split("'")[1] for f in axis_findings}
+    assert flagged == {"modle", "mdoel"}
+    # the bare string is attributed to the shard_map spec, the P() literal
+    # to the PartitionSpec branch — each exactly once (no double report)
+    assert len(axis_findings) == 2
+    assert sum("in_specs" in f.message for f in axis_findings) == 1
+    check_findings = [f for f in report.findings
+                      if "check_vma/check_rep" in f.message]
+    assert len(check_findings) == 1
+
+
+def test_shard_map_clean_call_sites_pass(tmp_path):
+    assert run(tmp_path, GOOD_SHARD_MAP).findings == []
+
+
 # ---------------------------------------------------------------------------
 # suppression pragma
 # ---------------------------------------------------------------------------

@@ -44,8 +44,9 @@ def test_dryrun_matrix_artifact_complete():
     """The committed artifact must cover every (arch x shape x mesh) cell
     with status OK — 33 applicable cells x 2 meshes, plus the paged-kernel
     decode dispatch axis (every attention-bearing decode cell again through
-    the fused pool) and the speculative verify-chunk axis (the same cells
-    at S = spec_k + 1) — 51 x 2 = 102."""
+    the fused pool), the speculative verify-chunk axis (the same cells at
+    S = spec_k + 1) and the shard_map lane-merge axis (the paged cells with
+    shard_map_pool=True) — 60 x 2 = 120."""
     path = ROOT / "artifacts" / "dryrun_matrix.json"
     if not path.exists():
         pytest.skip("matrix artifact not built yet (scripts/run_matrices.sh)")
@@ -61,11 +62,13 @@ def test_dryrun_matrix_artifact_complete():
                 for s in configs.get(a).shapes
                 if SHAPES_BY_NAME[s].kind == "decode"
                 and configs.get(a).family in ("dense", "moe", "hybrid"))
-    expected = (base + 2 * paged) * 2
+    expected = (base + 3 * paged) * 2
     ok = [r for r in rows if r.get("status") == "OK"]
-    assert len(rows) == expected == 102
+    assert len(rows) == expected == 120
     assert sum(1 for r in rows if r.get("kernel") == "paged") == paged * 2 == 18
     assert sum(1 for r in rows if r.get("kernel") == "spec") == paged * 2 == 18
+    assert sum(1 for r in rows
+               if r.get("kernel") == "shardmap") == paged * 2 == 18
     assert len(ok) == len(rows), [
         (r["arch"], r["shape"], r.get("error")) for r in rows if r not in ok]
 
