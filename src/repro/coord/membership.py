@@ -32,6 +32,7 @@ class MembershipService:
 
     def __init__(self, service: FaaSKeeperService):
         self.service = service
+        self._joins: Dict[str, int] = {}   # per worker-id incarnation count
         self._bootstrap()
 
     def _bootstrap(self) -> None:
@@ -50,7 +51,13 @@ class MembershipService:
     # -- worker lifecycle ---------------------------------------------------------
 
     def join(self, worker_id: str, capacity: Dict = None) -> WorkerHandle:
-        client = self.service.connect_sync(f"worker:{worker_id}")
+        # each join is a fresh FaaSKeeper session: a restart (or a takeover
+        # while the predecessor is still live) must not collide with the old
+        # incarnation's session id — only the *znode* name is stable
+        n = self._joins.get(worker_id, 0) + 1
+        self._joins[worker_id] = n
+        sid = f"worker:{worker_id}" if n == 1 else f"worker:{worker_id}#{n}"
+        client = self.service.connect_sync(sid)
         payload = json.dumps({"id": worker_id, **(capacity or {})}).encode()
         try:
             path = client.create(f"{MEMBERS_DIR}/{worker_id}", payload, ephemeral=True)

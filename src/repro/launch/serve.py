@@ -25,8 +25,10 @@ import numpy as np
 from .. import configs
 from ..coord.serving_front import InferenceRequest, ServingFrontend
 from ..core import SimCloud
+from ..core.storage import PageBlobStore
 from ..models import build_model
 from ..serve.engine import make_decode_step, make_prefill
+from ..serve.fleet import FleetController
 from ..serve.scheduler import DecodeScheduler, supports_continuous
 
 
@@ -115,7 +117,9 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
                    park_ttl_steps: int = 0,
                    attn_backend: str = "gather",
                    draft_model=None, draft_params=None,
-                   spec_k: int = 0) -> ServingFrontend:
+                   spec_k: int = 0,
+                   fleet_size: int = 0, min_workers: int = 0,
+                   scale_to_zero: bool = False) -> ServingFrontend:
     """Frontend for ``mode`` in {'continuous', 'shared', 'per-session'}.
 
     ``continuous`` falls back to the shared whole-batch flavour for families
@@ -132,6 +136,38 @@ def build_frontend(cloud: SimCloud, cfg, model, params, *, mode: str,
     """
     if mode not in ("continuous", "shared", "per-session"):
         raise ValueError(f"unknown serving mode {mode!r}")
+    if fleet_size:
+        if mode != "continuous" or not supports_continuous(cfg):
+            raise ValueError("--fleet needs the continuous scheduler "
+                             "(decoder-only families)")
+        if kv_mode != "paged" or cfg.family == "ssm":
+            raise ValueError("--fleet needs the paged KV pool "
+                             "(parked journals are page blobs)")
+        validate_pool_sizing(batch_size=batch_size, prompt_len=prompt_len,
+                             max_new=max_new, page_size=page_size,
+                             kv_pages=kv_pages, prefill_chunk=prefill_chunk,
+                             offload=offload)
+        store = PageBlobStore()     # the fleet's shared durable substrate
+        workers = [DecodeScheduler(model, params, n_slots=batch_size,
+                                   max_seq=prompt_len + max_new,
+                                   temperature=temperature, top_k=top_k,
+                                   mesh=mesh, kv_mode="paged",
+                                   page_size=page_size,
+                                   prefill_chunk=prefill_chunk,
+                                   kv_pages=kv_pages, offload=offload,
+                                   preempt_policy=preempt_policy,
+                                   idle_preempt_steps=idle_preempt_steps,
+                                   prefix_sharing=prefix_sharing,
+                                   park_sessions=True,
+                                   park_ttl_steps=park_ttl_steps,
+                                   blob_store=store, index_journal=True,
+                                   attn_backend=attn_backend,
+                                   draft_model=draft_model,
+                                   draft_params=draft_params, spec_k=spec_k)
+                   for _ in range(fleet_size)]
+        ctrl = FleetController(workers, min_workers=min_workers,
+                               scale_to_zero=scale_to_zero)
+        return ServingFrontend(cloud, fleet=ctrl, batch_size=batch_size)
     if mode == "continuous" and supports_continuous(cfg):
         if kv_mode == "paged" and cfg.family != "ssm":
             validate_pool_sizing(batch_size=batch_size, prompt_len=prompt_len,
@@ -226,7 +262,10 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 prefix_sharing: bool = False, park_sessions: bool = False,
                 park_ttl_steps: int = 0, attn_backend: str = "gather",
                 spec_draft: Optional[str] = None, spec_k: int = 0,
-                mesh: Optional[str] = None):
+                mesh: Optional[str] = None,
+                fleet: int = 0, min_workers: int = 0,
+                max_workers: Optional[int] = None,
+                scale_to_zero: bool = False):
     cfg = configs.get(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -255,7 +294,10 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                               park_ttl_steps=park_ttl_steps,
                               attn_backend=attn_backend,
                               draft_model=draft_model,
-                              draft_params=draft_params, spec_k=spec_k)
+                              draft_params=draft_params, spec_k=spec_k,
+                              fleet_size=(max_workers or fleet) if fleet else 0,
+                              min_workers=min_workers,
+                              scale_to_zero=scale_to_zero)
     t0 = time.time()
     spawn_workload(cloud, frontend, vocab=cfg.vocab, n_requests=n_requests,
                    sessions=sessions, prompt_len=prompt_len, max_new=max_new)
@@ -275,6 +317,19 @@ def run_serving(arch: str, n_requests: int = 12, *, max_new: int = 8,
                 f"cost ${frontend.runtime.cost_usd():.6f}; "
                 f"dropped {dropped} (dead-letter {frontend.dead_letter_ids()})")
         print(line)
+        if frontend.fleet is not None:
+            s = frontend.serving_stats()
+            print(f"fleet: {s['spawns']} spawns / {s['retires']} retires "
+                  f"({s['cold_starts_from_zero']} from zero), "
+                  f"{s['workers_live']}/{s['workers_max']} live at exit, "
+                  f"{s['meta_puts']} park-metas committed / "
+                  f"{s['meta_adoptions']} adopted, "
+                  f"{s['index_journal_puts']} index blobs journaled / "
+                  f"{s['index_adopted']} re-adopted")
+            print(f"fleet billing: {s['worker_invocations']} worker "
+                  f"invocations (${s['worker_cost_usd']:.6f}), storage "
+                  f"${s['offload_storage_usd']:.6f} ops + "
+                  f"${s['park_storage_usd']:.9f} retention")
         if frontend.scheduler is not None:
             s = frontend.serving_stats()
             print(f"decode scheduler: occupancy {s['occupancy']:.2f} "
@@ -364,6 +419,19 @@ def main() -> None:
     ap.add_argument("--spec-k", type=int, default=0,
                     help="draft tokens proposed per verify round "
                          "(default 3 when --spec-draft is set)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve with an elastic fleet of N disposable "
+                         "scheduler workers behind the shared dispatch "
+                         "queue (paged + parked sessions implied); 0 = one "
+                         "resident scheduler (default)")
+    ap.add_argument("--min-workers", type=int, default=0,
+                    help="always-warm worker floor the autoscaler holds")
+    ap.add_argument("--max-workers", type=int, default=None,
+                    help="worker ceiling (default: the --fleet count)")
+    ap.add_argument("--scale-to-zero", action="store_true",
+                    help="let the fleet drain-and-park every worker when "
+                         "idle; the next burst cold-starts from the blob "
+                         "store (parked journals + index blobs)")
     ap.add_argument("--mesh", default=None, metavar="DPxMP",
                     help="run the decode scheduler sharded over a device "
                          "mesh, e.g. 2x4 = slots over 2-way data, "
@@ -384,7 +452,9 @@ def main() -> None:
                 park_ttl_steps=args.park_ttl_steps,
                 attn_backend=args.attn_backend,
                 spec_draft=args.spec_draft, spec_k=args.spec_k,
-                mesh=args.mesh)
+                mesh=args.mesh, fleet=args.fleet,
+                min_workers=args.min_workers, max_workers=args.max_workers,
+                scale_to_zero=args.scale_to_zero)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
 from .engine import make_decode_step, make_offload_steps, make_prefill
+from .fleet import FleetController, FleetWorker
 from .lifecycle import IllegalTransition, Slot, SlotState
 from .sampling import greedy, temperature_sample
 from .scheduler import CompletedRequest, DecodeScheduler, supports_continuous
@@ -6,4 +7,4 @@ from .scheduler import CompletedRequest, DecodeScheduler, supports_continuous
 __all__ = ["make_decode_step", "make_offload_steps", "make_prefill",
            "greedy", "temperature_sample", "IllegalTransition", "Slot",
            "SlotState", "CompletedRequest", "DecodeScheduler",
-           "supports_continuous"]
+           "FleetController", "FleetWorker", "supports_continuous"]

@@ -212,6 +212,7 @@ class DecodeScheduler:
                  prefix_sharing: bool = False,
                  park_sessions: bool = False,
                  park_ttl_steps: int = 0,
+                 index_journal: bool = False,
                  attn_backend: str = "gather",
                  draft_model=None, draft_params=None, spec_k: int = 0):
         if not supports_continuous(model.cfg):
@@ -275,6 +276,15 @@ class DecodeScheduler:
         self._attention_only = model.cfg.family in ("dense", "moe")
         self._index_sharing = self.prefix_sharing and self._attention_only
         self.prefix_index = kvcache.PrefixIndex()
+        # fleet mode: journal every published index entry to the (shared)
+        # blob store so shared prefixes survive this worker's death, and
+        # namespace this worker's transient blob keys (preempt spills,
+        # parked-journal offloads) so a dead worker's keys can be garbage
+        # collected without racing a successor's
+        self.index_journal = bool(index_journal) and self._index_sharing
+        self.blob_ns = ""
+        self.index_journal_puts = 0
+        self.index_adopted = 0
         self._parked: Dict[str, ParkedSession] = {}
         self._copy_pages = jax.jit(kvcache.copy_pages)
         self._gather_state = jax.jit(kvcache.gather_slot_state)
@@ -910,9 +920,16 @@ class DecodeScheduler:
         if hashes is None or len(hashes) < full:
             hashes = kvcache.page_hashes(history[: full * self.page_size],
                                          self.page_size)
-        self.prefix_index.publish(hashes[:full],
-                                  [int(row[i]) for i in range(full)],
-                                  self.allocator)
+        pids = [int(row[i]) for i in range(full)]
+        self.prefix_index.publish(hashes[:full], pids, self.allocator)
+        if self.index_journal:
+            # persist the published entries: each full page's contents go to
+            # the shared store under its chain hash, so a successor worker
+            # can re-adopt this prefix after this worker dies
+            self.index_journal_puts += self.prefix_index.journal(
+                zip(hashes[:full], pids, strict=True), self.blob_store,
+                lambda ids: jax.device_get(
+                    self._extract(self.cache, jnp.asarray(ids, jnp.int32))))
 
     def _park_slot(self, slot: Slot, req: _Request, tokens: np.ndarray) -> None:
         """Park a DRAINED slot: ownership of every mapped page transfers to
@@ -967,7 +984,7 @@ class DecodeScheduler:
         phys = [int(rec.page_row[i]) for i in range(npg)]
         blob = jax.device_get(
             self._extract(self.cache, jnp.asarray(phys, jnp.int32)))
-        key = f"park/{rec.session}/s{self.steps}"
+        key = f"park/{self.blob_ns}{rec.session}/s{self.steps}"
         self.blob_store.put(key, blob, kvcache.blob_nbytes(blob))
         rec.blob_key = key
         rec.blob_pidx = list(range(npg))
@@ -993,6 +1010,54 @@ class DecodeScheduler:
             if self.steps - rec.parked_step > self.park_ttl_steps:
                 self._drop_record(self._parked.pop(session))
                 self.park_expirations += 1
+
+    # -- fleet hooks (worker drain / cold start) -----------------------------
+
+    def externalize_session(self, session: str) -> ParkedSession:
+        """Fleet drain: detach one parked journal from this worker entirely.
+        The record's pages are pushed to the (shared) blob store if still
+        resident, its slot is reclaimed, and the record — now pure host data
+        plus a blob key — is popped and returned for the controller to hand
+        to a successor worker.  After this the worker holds no reference to
+        the session."""
+        rec = self._parked.pop(session)
+        if rec.pages:
+            self._offload_parked(rec)
+        return rec
+
+    def adopt_parked(self, rec: ParkedSession) -> None:
+        """Fleet routing: install an externalized (blob-resident) journal so
+        the next admission for its session restores from the shared store
+        instead of re-prefilling.  The record must hold no pool references —
+        those died with the worker that wrote it."""
+        if rec.pages or rec.slot is not None:
+            raise ValueError(
+                f"adopting session {rec.session!r} with live pool state "
+                "(pages/slot are worker-local and do not transfer)")
+        rec.parked_step = self.steps
+        self._parked[rec.session] = rec
+
+    def adopt_index_journal(self) -> int:
+        """Worker cold start: re-adopt journaled prefix-index entries from
+        the shared blob store into this fresh pool (allocate, scatter, adopt
+        — the alloc-time reference transfers to the index).  Bounded so
+        adoption always leaves at least one slot's worst case uncommitted;
+        index pages are reclaimable cache either way, so a skipped entry
+        only costs a re-prefill."""
+        if not self.index_journal:
+            return 0
+
+        def install(pid, blob):
+            self.cache = self._inject(self.cache,
+                                      jnp.asarray([pid], jnp.int32),
+                                      self._stage_put(blob))
+
+        n = self.prefix_index.rebuild(
+            self.blob_store, self.allocator,
+            budget=lambda: self._uncommitted() - self.max_pages,
+            install=install)
+        self.index_adopted += n
+        return n
 
     def _reclaim_pool(self, need: int, keep: Optional[ParkedSession] = None,
                       pinned: Sequence[int] = ()) -> None:
@@ -1055,7 +1120,7 @@ class DecodeScheduler:
         blob = jax.device_get(
             self._extract(self.cache, jnp.asarray(phys, jnp.int32)))
         nbytes = kvcache.blob_nbytes(blob)
-        key = f"kv/{slot.req.request_id}/p{slot.preempts}"
+        key = f"kv/{self.blob_ns}{slot.req.request_id}/p{slot.preempts}"
         self.blob_store.put(key, blob, nbytes)
         slot.blob_key = key
         slot.blob_pidx = pidx
@@ -1436,13 +1501,20 @@ class DecodeScheduler:
             self._fill_slots()
         return finished
 
-    def reset(self) -> None:
+    def reset(self, *, clear_blob_store: bool = True) -> None:
         """Abort all in-flight work (crash recovery: the queue layer
         redelivers; completed requests are deduped by the frontend).  The
         pool returns to fully free, every page-table row to unmapped, the
         blob store is emptied, and the prefix index and parked-session table
         are cleared — a redelivered admission replays from its prompt, never
-        from an orphaned blob or another life's shared pages."""
+        from an orphaned blob or another life's shared pages.
+
+        ``clear_blob_store=False`` is the *fleet* recycle path: when this
+        scheduler is one disposable worker over a store shared with its
+        siblings, wiping the store would destroy other workers' spills and
+        every externalized session journal / index entry — exactly the
+        durable state scale-to-zero exists to keep.  The fleet controller
+        garbage-collects a dead worker's namespaced keys itself."""
         self.slots = [s.force_empty() for s in self.slots]
         self.pending = []
         self._active_sessions.clear()
@@ -1460,7 +1532,8 @@ class DecodeScheduler:
         self.last_tokens = jnp.zeros((self.n_slots,), jnp.int32)
         self.out_buf = jnp.zeros((self.n_slots, self.max_seq), jnp.int32)
         self.out_pos = jnp.zeros((self.n_slots,), jnp.int32)
-        self.blob_store.clear()
+        if clear_blob_store:
+            self.blob_store.clear()
         if self.kv_mode == "paged":
             self.allocator.reset()
             self._reserved = 0
@@ -1606,6 +1679,8 @@ class DecodeScheduler:
             "park_expirations": self.park_expirations,
             "parked_sessions": len(self._parked),
             "index_pages": len(self.prefix_index),
+            "index_journal_puts": self.index_journal_puts,
+            "index_adopted": self.index_adopted,
         }
 
     def spec_stats(self) -> Dict[str, float]:

@@ -29,6 +29,60 @@ def test_membership_join_leave_evict():
     assert mem.members() == ["w2"]
 
 
+def test_membership_takeover_after_crash_restart():
+    """``join``'s stale-ephemeral branch: a worker that crashes and restarts
+    *before* the heartbeat evicted its old session finds its own znode still
+    there — it must take it over (delete + recreate under the new session),
+    and the subsequent eviction of the dead session must not remove the new
+    incarnation's ephemeral."""
+    cloud, svc = make_service()
+    mem = MembershipService(svc)
+    h_old = mem.join("w0")
+    mem.fail(h_old)                   # crash; no heartbeat has run yet
+    h_new = mem.join("w0")            # restart: stale znode -> takeover
+    assert mem.members() == ["w0"]
+    svc.start_heartbeat(period=5.0, max_runs=3)
+    cloud.run()                       # dead session evicted...
+    assert mem.members() == ["w0"], \
+        "eviction of the stale session removed the takeover's ephemeral"
+    mem.leave(h_new)
+    assert mem.members() == []
+
+
+def test_membership_double_join():
+    """Two live joins under the same worker id: takeover is not crash-only —
+    the latest session owns the znode.  Deletes are by *path* (ZooKeeper
+    semantics, and what the takeover branch itself relies on), so a leave
+    through the superseded handle still removes the znode; the second leave
+    is then an idempotent no-op."""
+    cloud, svc = make_service()
+    mem = MembershipService(svc)
+    h1 = mem.join("w0")
+    h2 = mem.join("w0")
+    assert mem.members() == ["w0"]
+    mem.leave(h1)                     # stale handle, same path
+    assert mem.members() == []
+    mem.leave(h2)                     # NoNodeError swallowed
+    assert mem.members() == []
+
+
+def test_membership_eviction_vs_rejoin_race():
+    """Heartbeat sweep already queued when the restart takes over: the sweep
+    evicts the failed session, but the znode it would have removed belongs
+    to the new incarnation by then — the rejoined worker must survive."""
+    cloud, svc = make_service()
+    mem = MembershipService(svc)
+    h_old = mem.join("w0")
+    mem.join("w1")
+    mem.fail(h_old)
+    svc.start_heartbeat(period=5.0, max_runs=2)   # sweep queued...
+    h_new = mem.join("w0")                        # ...takeover lands first
+    cloud.run()
+    assert sorted(mem.members()) == ["w0", "w1"]
+    mem.leave(h_new)
+    assert mem.members() == ["w1"]
+
+
 def test_mesh_generation_single_system_image():
     cloud, svc = make_service()
     mem = MembershipService(svc)
